@@ -1,0 +1,63 @@
+"""Paper Figs. 20/21: microbatch-based pipeline ablation.
+
+Decode (Fig. 20): per-layer latency with vs without two-stream overlap. With
+the pipeline, the attention path of µb0 overlaps the MoE path (dispatch +
+expert FFN + combine) of µb1: per-layer latency = max(path0, path1) instead
+of their sum. Paths are derived from the compiled decode dry-run's roofline
+terms (collectives = MoE path communication; compute+memory split between
+attention and MoE by FLOP share).
+
+Prefill (Fig. 21): same construction from the prefill dry-run — collective
+(all_to_all) time overlaps AIC-analogue compute.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, ensure_dryrun
+
+ARCH = "deepseek-r1"
+MOE_FLOP_SHARE = 0.55   # MoE FFN share of decode FLOPs for R1 (37B active;
+                        # attention+heads ≈ 45% at 4K context)
+
+
+def ablate(rec, phase: str) -> None:
+    c, m, k = rec["compute_s"], rec["memory_s"], rec["collective_s"]
+    serial = max(c, m) + k
+    attn_path = max(c, m) * (1 - MOE_FLOP_SHARE)
+    moe_path = max(c, m) * MOE_FLOP_SHARE + k
+    overlapped = max(attn_path, moe_path)
+    gain = serial / overlapped - 1
+    emit("microbatch", f"{phase}_serial_ms", round(serial * 1e3, 2), "no_pipeline")
+    emit("microbatch", f"{phase}_overlapped_ms", round(overlapped * 1e3, 2),
+         f"two_stream (paths {attn_path*1e3:.2f}/{moe_path*1e3:.2f})")
+    emit("microbatch", f"{phase}_gain_pct", round(gain * 100, 1),
+         "paper_decode:+5.8-9.4%, paper_prefill:+23-31%")
+
+
+def main() -> None:
+    print("name,metric,value,derived")
+    rec_d = ensure_dryrun(ARCH, "decode_32k")
+    if rec_d:
+        ablate(rec_d, "decode")
+    rec_p = ensure_dryrun(ARCH, "prefill_32k")
+    if rec_p:
+        ablate(rec_p, "prefill")
+    # functional: microbatched step == plain step (correctness of the split)
+    import jax, jax.numpy as jnp, numpy as np  # noqa: E401
+    from repro.configs import get_config, smoke_variant
+    from repro.core.microbatch import microbatched
+    from repro.models import decode_step, init_params, prefill
+    cfg = smoke_variant(get_config("qwen3-8b"))
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0, cfg.vocab_size)
+    _, caches = prefill(params, cfg, {"tokens": toks}, capacity=20,
+                        cache_dtype=jnp.float32)
+    step = lambda t, c: decode_step(params, cfg, t, c, jnp.int32(12))
+    t1 = jnp.ones((4, 1), jnp.int32)
+    o_plain, _ = step(t1, caches)
+    o_mb, _ = microbatched(step, 2)(t1, caches)
+    err = float(np.max(np.abs(np.asarray(o_plain) - np.asarray(o_mb))))
+    emit("microbatch", "split_equivalence_max_err", f"{err:.2e}", "must_be~0")
+
+
+if __name__ == "__main__":
+    main()

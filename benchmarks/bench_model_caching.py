@@ -1,0 +1,63 @@
+"""Paper Table 2: model loading / switching latency and DRAM overhead —
+No-Cache (OBS) vs Local-DRAM-Cache vs EMS, using the functional
+disaggregated-pool simulator calibrated to the paper's constants
+(2.5 GB/s OBS bucket, UB plane Table 1)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.mempool import MemoryPool, ModelCache
+
+MODEL_BYTES = 671 * 10**9     # 671B INT8 (paper Table 2)
+N_INSTANCES = 8
+
+
+def main() -> None:
+    print("name,metric,value,derived")
+    # --- No cache: every instance pulls the full model from OBS -----------
+    # All 8 instances hit the same 2.5 GB/s bucket CONCURRENTLY, so each sees
+    # BW/8 — the paper's ~2560 s contention figure.
+    pool = MemoryPool(n_nodes=32)
+    mc = ModelCache(pool)
+    meta = mc.register("dsr1", "v1", MODEL_BYTES)
+    t = mc.load_to_npu(meta, n_instances=N_INSTANCES)  # serial total = N×(S/BW)
+    emit("model_cache", "nocache_cold_start_s", round(t),
+         "concurrent_8x_contention (paper:~2560s)")
+    emit("model_cache", "nocache_dram_overhead_x", 0, "")
+
+    # --- Local DRAM cache: cold identical; warm fast; 8x DRAM -------------
+    emit("model_cache", "local_warm_start_s", 5, "DRAM->NPU_per_paper")
+    emit("model_cache", "local_dram_overhead_x", 8, "replica_per_instance")
+    # switch: 8 models, random target, only 1 cached locally => 12.5% hit
+    emit("model_cache", "local_switch_hit_rate", 0.125, "")
+
+    # --- EMS: shared OBS fill once + UB loads; 1x DRAM --------------------
+    pool2 = MemoryPool(n_nodes=32, dram_per_node=1 << 38)
+    mc2 = ModelCache(pool2)
+    meta2 = mc2.register("dsr1", "v1", MODEL_BYTES)
+    t_fill = mc2.prefetch(meta2)
+    t_warm = mc2.load_to_npu(meta2, n_instances=N_INSTANCES) / N_INSTANCES
+    emit("model_cache", "ems_cold_start_s", round(t_fill + t_warm),
+         "paper:~320s")
+    emit("model_cache", "ems_warm_start_s", round(t_warm, 1), "paper:~5s")
+    emit("model_cache", "ems_dram_overhead_x", 1, "single_shared_copy")
+
+    # --- model switch across 8 active models via EMS ----------------------
+    metas = [mc2.register(f"m{i}", "v1", MODEL_BYTES) for i in range(8)]
+    for m in metas:
+        mc2.prefetch(m)
+    rng = np.random.RandomState(0)
+    hits, times = 0, []
+    for _ in range(8):
+        target = metas[rng.randint(8)]
+        dt, warm = mc2.switch_model(target)
+        hits += warm
+        times.append(dt)
+    emit("model_cache", "ems_switch_hit_rate", hits / 8, "paper:100%")
+    emit("model_cache", "ems_switch_latency_s", round(float(np.mean(times)), 1),
+         "paper:~5s")
+
+
+if __name__ == "__main__":
+    main()

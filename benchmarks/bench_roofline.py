@@ -1,0 +1,40 @@
+"""§Roofline deliverable: the full (arch × shape) roofline table from the
+dry-run artifacts — compute/memory/collective terms, dominant bottleneck,
+MODEL_FLOPS ratio — printed as CSV (and consumed by EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR, emit
+
+
+def main() -> None:
+    print("name,metric,value,derived")
+    if not os.path.isdir(DRYRUN_DIR):
+        emit("roofline", "status", "NA", "run_repro.launch.dryrun_--all_first")
+        return
+    rows = []
+    for fn in sorted(os.listdir(DRYRUN_DIR)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, fn)) as f:
+            rec = json.load(f)
+        key = f"{rec['arch']}|{rec['shape']}|{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            emit("roofline", key, "skipped", rec["reason"].replace(",", ";"))
+            continue
+        if rec.get("status") != "ok":
+            emit("roofline", key, "error",
+                 rec.get("error", "?").replace(",", ";")[:80])
+            continue
+        emit("roofline", key,
+             rec["dominant"],
+             f"compute_ms={rec['compute_s']*1e3:.2f};"
+             f"memory_ms={rec['memory_s']*1e3:.2f};"
+             f"collective_ms={rec['collective_s']*1e3:.2f};"
+             f"useful={rec.get('useful_ratio') and round(rec['useful_ratio'], 3)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""MTP speculative decoding (paper §4.2.4) step by step, showing the greedy-
+equivalence property and per-iteration acceptance.
+
+    PYTHONPATH=src python examples/mtp_speculative.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core import init_mtp_params
+from repro.core.mtp import mtp_step, propose_draft
+from repro.models import decode_step, init_params, prefill
+
+cfg = smoke_variant(get_config("qwen3-8b"))
+params = init_params(jax.random.PRNGKey(0), cfg)
+mtp = init_mtp_params(jax.random.PRNGKey(1), cfg)
+
+prompt = list(np.random.RandomState(0).randint(0, cfg.vocab_size, 20))
+N_NEW = 10
+
+# --- reference: plain greedy decode -----------------------------------------
+logits, caches = prefill(params, cfg, {"tokens": jnp.asarray([prompt])},
+                         capacity=64, cache_dtype=jnp.float32)
+ref = [int(jnp.argmax(logits[0, -1]))]
+cl = jnp.int32(len(prompt))
+for _ in range(N_NEW - 1):
+    lg, caches = decode_step(params, cfg, jnp.asarray([[ref[-1]]]), caches, cl)
+    ref.append(int(jnp.argmax(lg[0])))
+    cl = cl + 1
+print("plain greedy :", ref, f"({N_NEW} iterations)")
+
+# --- MTP: draft + validate, 1+accept tokens per iteration -------------------
+logits, caches = prefill(params, cfg, {"tokens": jnp.asarray([prompt])},
+                         capacity=64, cache_dtype=jnp.float32)
+x = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+d = propose_draft(params, mtp, cfg, x)
+cl = jnp.full((1,), len(prompt), jnp.int32)
+got, iters, accepts = [int(x[0])], 0, 0
+key = jax.random.PRNGKey(2)
+while len(got) < N_NEW:
+    key, sub = jax.random.split(key)
+    em, acc, x, d, caches, cl = mtp_step(params, mtp, cfg, x, d, caches, cl,
+                                         sub, greedy=True)
+    iters += 1
+    got.append(int(em[0, 0]))
+    if bool(acc[0]) and len(got) < N_NEW:
+        got.append(int(em[0, 1]))
+        accepts += 1
+print("MTP greedy   :", got[:N_NEW], f"({iters} iterations, "
+      f"{accepts} accepted drafts)")
+assert got[:N_NEW] == ref, "speculative decoding must preserve greedy output"
+print(f"tokens/iteration: {len(got[:N_NEW])/iters:.2f} "
+      f"(untrained draft head; paper's trained MTP reaches ~1.7)")

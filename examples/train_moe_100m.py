@@ -1,0 +1,50 @@
+"""End-to-end training driver: a ~100M-param OLMoE-style MoE trained for a
+few hundred steps on the synthetic packed corpus, with checkpointing.
+
+Full-scale equivalent:
+    python -m repro.launch.train --arch olmoe-1b-7b --full ...   (on TPU)
+
+Here (CPU container): a 110M-param config, 300 steps, loss curve printed.
+
+    PYTHONPATH=src python examples/train_moe_100m.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.data import make_batch_iter
+from repro.models import init_params
+from repro.train import OptConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_moe_100m")
+    args = ap.parse_args()
+
+    # ~100M-param MoE in the OLMoE family (8 experts, top-2)
+    cfg = dataclasses.replace(
+        get_config("olmoe-1b-7b"),
+        name="olmoe-100m", num_layers=4, d_model=256, num_heads=4,
+        num_kv_heads=4, head_dim=64, d_ff=512, vocab_size=50304,
+        num_experts=8, num_experts_per_tok=2, dtype="float32",
+    )
+    print(f"{cfg.name}: total={cfg.param_count()/1e6:.1f}M "
+          f"active={cfg.param_count(True)/1e6:.1f}M")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batches = make_batch_iter(cfg.vocab_size, seq_len=128, global_batch=8,
+                              seed=0)
+    opt = OptConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps)
+    params, hist = train(params, cfg, batches, args.steps, opt, log_every=20)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    save_checkpoint(args.ckpt, params, args.steps, meta={"arch": cfg.name})
+    print(f"final loss {hist[-1]['loss']:.3f} "
+          f"(from {hist[0]['loss']:.3f}); checkpoint at {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

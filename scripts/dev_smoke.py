@@ -1,0 +1,51 @@
+"""Dev sanity: every family forward + prefill/decode agreement on smoke configs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, list_configs, smoke_variant
+from repro.models import decode_step, forward, init_params, lm_loss, prefill
+
+
+def batch_for(cfg, b=2, s=16, key=None):
+    key = key or jax.random.PRNGKey(0)
+    batch = {}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.frontend == "vision_patches":
+        p = cfg.num_prefix_embeddings
+        batch["prefix_emb"] = jax.random.normal(key, (b, p, cfg.d_model), jnp.float32)
+        batch["tokens"] = batch["tokens"][:, : s - p]
+    batch["labels"] = jax.random.randint(jax.random.PRNGKey(1), (b, s if cfg.frontend != "vision_patches" else s - p), 0, cfg.vocab_size)
+    return batch
+
+
+def main():
+    for name in list_configs():
+        cfg = smoke_variant(get_config(name))
+        key = jax.random.PRNGKey(42)
+        params = init_params(key, cfg)
+        n_par = sum(np.prod(x.shape) for x in jax.tree.leaves(params))
+        b, s = 2, 16
+        batch = batch_for(cfg, b, s)
+        logits, aux = forward(params, cfg, batch)
+        assert not bool(jnp.any(jnp.isnan(logits))), f"{name}: NaN logits"
+        loss, metrics = lm_loss(params, cfg, batch)
+        msg = f"{name:22s} params={n_par/1e6:6.2f}M fwd={logits.shape} loss={float(loss):.3f}"
+        if cfg.supports_decode:
+            pl_logits, caches = prefill(params, cfg, batch, capacity=s + 8,
+                                        cache_dtype=jnp.float32)
+            tok = jnp.argmax(pl_logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            dl, caches = decode_step(params, cfg, tok, caches, jnp.int32(s))
+            assert not bool(jnp.any(jnp.isnan(dl))), f"{name}: NaN decode"
+            # prefill logits at last pos should match forward logits
+            np.testing.assert_allclose(np.asarray(pl_logits), np.asarray(logits),
+                                       rtol=2e-3, atol=2e-3)
+            msg += f" decode={dl.shape}"
+        print(msg, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Render EXPERIMENTS.md §Dry-run + §Roofline tables from dryrun JSONs.
+
+Usage: PYTHONPATH=src python scripts/make_experiments.py > /tmp/tables.md
+(The curated EXPERIMENTS.md embeds this output plus the §Perf log.)
+"""
+import glob
+import json
+import os
+import sys
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+
+    for mesh in ("16x16", "2x16x16"):
+        sub = [r for r in recs if r["mesh"] == mesh]
+        if not sub:
+            continue
+        print(f"\n### Mesh {mesh} ({256 if mesh=='16x16' else 512} chips)\n")
+        print("| arch | shape | status | dom | compute ms | memory ms "
+              "| collective ms | HLO-mem ms | useful | args GiB/dev | temps GiB/dev |")
+        print("|---|---|---|---|---:|---:|---:|---:|---:|---:|---:|")
+        for r in sorted(sub, key=lambda r: (r["arch"], r["shape"])):
+            if r["status"] == "skipped":
+                print(f"| {r['arch']} | {r['shape']} | skipped — "
+                      f"{r['reason'][:60]} | | | | | | | | |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | ERROR "
+                      f"{r.get('error','')[:60]} | | | | | | | | |")
+                continue
+            u = r.get("useful_ratio")
+            print(f"| {r['arch']} | {r['shape']} | ok | {r['dominant']} "
+                  f"| {r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} "
+                  f"| {r['collective_s']*1e3:.1f} "
+                  f"| {r.get('memory_hlo_s', 0)*1e3:.0f} "
+                  f"| {u and round(u,3)} "
+                  f"| {fmt_bytes(r['argument_bytes'])} "
+                  f"| {fmt_bytes(r['temp_bytes'])} |")
+
+    # collective schedule summary
+    print("\n### Collective mix (per-device bytes, 16x16)\n")
+    print("| arch | shape | all-gather | all-reduce | reduce-scatter "
+          "| all-to-all | permute | #ops |")
+    print("|---|---|---:|---:|---:|---:|---:|---:|")
+    for r in sorted((r for r in recs if r["mesh"] == "16x16"
+                     and r["status"] == "ok"),
+                    key=lambda r: (r["arch"], r["shape"])):
+        c = r["collectives"]
+        mb = lambda x: f"{x/2**20:.1f}M" if x else "0"
+        print(f"| {r['arch']} | {r['shape']} | {mb(c['all-gather'])} "
+              f"| {mb(c['all-reduce'])} | {mb(c['reduce-scatter'])} "
+              f"| {mb(c['all-to-all'])} | {mb(c['collective-permute'])} "
+              f"| {c['count']} |")
+
+
+if __name__ == "__main__":
+    main()

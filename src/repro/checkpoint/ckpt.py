@@ -1,0 +1,55 @@
+"""Sharded npz checkpointing with version metadata.
+
+Feeds EMS Model Caching (§4.4.3): a checkpoint is decomposed into fixed-size
+blocks whose keys embed (name, version) — the same block layout ModelCache
+registers in the disaggregated pool.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(path: str, params: Any, step: int,
+                    meta: Optional[Dict] = None, shard_bytes: int = 1 << 28) -> Dict:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(params)
+    manifest = {"step": step, "meta": meta or {}, "n_leaves": len(leaves),
+                "shards": []}
+    shard, shard_size, shard_id = {}, 0, 0
+
+    def flush():
+        nonlocal shard, shard_size, shard_id
+        if shard:
+            fn = f"shard_{shard_id:04d}.npz"
+            np.savez(os.path.join(path, fn), **shard)
+            manifest["shards"].append(fn)
+            shard, shard_size, shard_id = {}, 0, shard_id + 1
+
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        shard[f"leaf_{i:05d}"] = arr
+        shard_size += arr.nbytes
+        if shard_size >= shard_bytes:
+            flush()
+    flush()
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+def load_checkpoint(path: str, params_template: Any) -> Tuple[Any, int]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = {}
+    for fn in manifest["shards"]:
+        with np.load(os.path.join(path, fn)) as z:
+            leaves.update({k: z[k] for k in z.files})
+    tmpl_leaves, treedef = jax.tree.flatten(params_template)
+    out = [jax.numpy.asarray(leaves[f"leaf_{i:05d}"]).astype(t.dtype)
+           for i, t in enumerate(tmpl_leaves)]
+    return jax.tree.unflatten(treedef, out), manifest["step"]

@@ -1,0 +1,13 @@
+"""The paper's named contributions as composable modules.
+
+* lep.py             — Large-scale Expert Parallelism + FusedDispatch/Combine
+* microbatch.py      — two-stream microbatch pipelining (decode + prefill)
+* mtp.py             — multiple-token prediction with in-graph sampling
+* hybrid_parallel.py — staged SP→TP→SP MLA prefill
+* parallel.py        — mesh context / sharding helpers
+"""
+from repro.core.lep import make_lep_moe_fn, pick_lep_plan  # noqa: F401
+from repro.core.microbatch import microbatched, microbatched_loss  # noqa: F401
+from repro.core.mtp import init_mtp_params, mtp_step, propose_draft, sample_top_p  # noqa: F401
+from repro.core.hybrid_parallel import mla_prefill_hybrid  # noqa: F401
+from repro.core.parallel import constrain, mesh_context, set_current_mesh  # noqa: F401

@@ -1,0 +1,90 @@
+"""Microbatch-based pipelining (paper §4.2.3 decode, §4.3.2 prefill).
+
+The paper splits each batch into two interleaved microbatches so one stream's
+attention overlaps the other's MoE dispatch/combine communication (decode),
+and AIC-compute overlaps SDMA-driven all-to-all (prefill). On TPU, stream
+assignment is XLA's job: we expose the same *structure* — two data-independent
+microbatch computations inside one jitted step — and the latency-hiding
+scheduler overlaps µb0's collectives with µb1's compute. On real TPU runs,
+enable ``--xla_tpu_enable_latency_hiding_scheduler=true`` (see launch/).
+
+The ablation benchmark (paper Fig. 20/21) compares n_micro=1 vs n_micro=2 by
+counting overlappable collective bytes in the compiled HLO schedule.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _split_batch(tree: Any, n: int, i: int) -> Any:
+    """Slice microbatch i of n along the batch axis of every batched leaf.
+
+    Caches carry a leading layer axis, so batch is axis 1 for rank>=3 leaves
+    and axis 0 for rank-2 leaves (tokens). Scalars pass through.
+    """
+    def f(leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return leaf
+        axis = 0 if leaf.ndim <= 2 else 1
+        b = leaf.shape[axis]
+        if b % n:
+            return leaf
+        step = b // n
+        return jax.lax.dynamic_slice_in_dim(leaf, i * step, step, axis=axis)
+    return jax.tree.map(f, tree)
+
+
+def _concat_batch(trees, axis_fn=None):
+    def f(*leaves):
+        l0 = leaves[0]
+        if not hasattr(l0, "ndim") or l0.ndim == 0:
+            return l0
+        axis = 0 if l0.ndim <= 2 else 1
+        return jnp.concatenate(leaves, axis=axis)
+    return jax.tree.map(f, *trees)
+
+
+def microbatched(step_fn: Callable, n_micro: int = 2):
+    """Wrap a (tokens, caches, ...) -> (out, caches) step into n interleaved
+    microbatches. The microbatch computations share no data, so the compiler
+    may overlap µb_i's MoE collectives with µb_j's attention compute — the
+    paper's two-stream decode pipeline, expressed structurally."""
+    if n_micro == 1:
+        return step_fn
+
+    def wrapped(tokens, caches, *args, **kwargs):
+        outs, new_caches = [], []
+        for i in range(n_micro):
+            t_i = _split_batch(tokens, n_micro, i)
+            c_i = _split_batch(caches, n_micro, i)
+            o_i, nc_i = step_fn(t_i, c_i, *args, **kwargs)
+            outs.append(o_i)
+            new_caches.append(nc_i)
+        return _concat_batch(outs), _concat_batch(new_caches)
+
+    return wrapped
+
+
+def microbatched_loss(loss_fn: Callable, n_micro: int = 2):
+    """Prefill/training analogue: average loss over interleaved microbatches.
+    Structurally exposes per-µb MoE all_to_alls for overlap (paper Fig. 18b)."""
+    if n_micro == 1:
+        return loss_fn
+
+    def wrapped(params, batch, *args, **kwargs):
+        total, metrics = None, None
+        for i in range(n_micro):
+            b_i = jax.tree.map(
+                lambda a: _split_batch(a, n_micro, i) if hasattr(a, "ndim") else a,
+                batch)
+            l_i, m_i = loss_fn(params, b_i, *args, **kwargs)
+            total = l_i if total is None else total + l_i
+            metrics = m_i if metrics is None else jax.tree.map(
+                lambda x, y: x + y, metrics, m_i)
+        inv = 1.0 / n_micro
+        return total * inv, jax.tree.map(lambda x: x * inv, metrics)
+
+    return wrapped

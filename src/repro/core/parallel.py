@@ -1,0 +1,59 @@
+"""Mesh context + sharding helpers shared by train/serve/dry-run paths."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_current_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextmanager
+def mesh_context(mesh: Mesh):
+    prev = get_current_mesh()
+    set_current_mesh(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        set_current_mesh(prev)
+
+
+def batch_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    """Axes the global batch is sharded over (pod joins data when present)."""
+    mesh = mesh or _MESH
+    if mesh is None:
+        return ()
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def all_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    mesh = mesh or _MESH
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint iff a mesh context is active."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, SyntheticCorpus, make_batch_iter  # noqa: F401

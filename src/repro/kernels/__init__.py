@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Four kernels, each a package with ``<name>.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper) and ``ref.py`` (pure-jnp oracle):
+
+* ``mla_attention``  — absorbed-MLA decode attention over the compressed
+  latent KV cache (paper §4.2.2, FlashMLA analogue; Tables 8/9).
+* ``int8_gemm``      — INT8×INT8→INT32 GEMM with per-token × per-channel
+  rescale (paper §4.5; Table 10).
+* ``ssd_scan``       — Mamba2 SSD chunked scan (assigned mamba2/zamba2 archs).
+* ``dispatch_quant`` — fused per-token INT8 quantize+pack, the producer side
+  of FusedDispatch's early quantization (paper §4.2.1).
+
+On this CPU-only container kernels run under ``interpret=True``; on real TPU
+the same pallas_call lowers to Mosaic. All kernels are validated against
+their ``ref.py`` oracles across shape/dtype sweeps in tests/.
+"""
+
+import jax
+
+INTERPRET = jax.default_backend() == "cpu"

@@ -1,0 +1,1 @@
+from repro.kernels.dispatch_quant.ops import dispatch_quantize  # noqa: F401

@@ -1,0 +1,15 @@
+"""Public jit'd wrapper for fused dispatch quantization."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import INTERPRET
+from repro.kernels.dispatch_quant.dispatch_quant import dispatch_quantize_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bt",))
+def dispatch_quantize(x, bt: int = 256):
+    """x: (T, D) float -> (q int8 (T,D), per-token scale f32 (T,1))."""
+    return dispatch_quantize_pallas(x, bt=bt, interpret=INTERPRET)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for fused per-token INT8 quantization (early quantization)."""
+import jax.numpy as jnp
+
+
+def dispatch_quantize_ref(x):
+    """x: (T, D) float -> (q int8 (T,D), scale f32 (T,1)); scale = absmax/127."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale

@@ -1,0 +1,1 @@
+from repro.kernels.int8_gemm.ops import int8_matmul  # noqa: F401

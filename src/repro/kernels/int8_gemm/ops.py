@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the INT8 GEMM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.int8_gemm.int8_gemm import int8_matmul_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "bm", "bn", "bk"))
+def int8_matmul(x_q, w_q, x_scale, w_scale, out_dtype=jnp.bfloat16,
+                bm: int = 128, bn: int = 128, bk: int = 128):
+    return int8_matmul_pallas(x_q, w_q, x_scale, w_scale, out_dtype,
+                              bm=bm, bn=bn, bk=bk, interpret=INTERPRET)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the INT8 GEMM with mixed-granularity rescale."""
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x_q, w_q, x_scale, w_scale, out_dtype=jnp.bfloat16):
+    """x_q: (M,K) int8; w_q: (K,N) int8; x_scale: (M,1) f32 (per token);
+    w_scale: (1,N) f32 (per channel). Returns (M,N) out_dtype."""
+    acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)

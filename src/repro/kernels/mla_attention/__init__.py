@@ -1,0 +1,1 @@
+from repro.kernels.mla_attention.ops import mla_decode_attention  # noqa: F401

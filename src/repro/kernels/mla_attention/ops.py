@@ -1,0 +1,19 @@
+"""Public jit'd wrapper for the absorbed-MLA decode attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import INTERPRET
+from repro.kernels.mla_attention.mla_attention import mla_decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "kvr", "block_s"))
+def mla_decode_attention(q_lat, q_rope, cache, valid, scale: float, kvr: int,
+                         block_s: int = 128):
+    """q_lat (B,H,R), q_rope (B,H,Dr), cache (B,S,R+Dr) f32, valid (S,) bool
+    -> o_lat (B,H,R) f32."""
+    return mla_decode_attention_pallas(q_lat, q_rope, cache, valid,
+                                       float(scale), int(kvr),
+                                       block_s=block_s, interpret=INTERPRET)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for absorbed-MLA decode attention."""
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def mla_decode_attention_ref(q_lat, q_rope, cache, valid, scale, kvr: int):
+    """q_lat: (B,H,R); q_rope: (B,H,Dr); cache: (B,S,R+Dr) f32; valid: (S,) bool.
+
+    Returns o_lat (B,H,R) f32 — attention output still in latent space.
+    """
+    ck = cache[..., :kvr]
+    kr = cache[..., kvr:]
+    scores = (jnp.einsum("bhr,btr->bht", q_lat, ck)
+              + jnp.einsum("bhe,bte->bht", q_rope, kr)) * scale
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bht,btr->bhr", probs, ck)

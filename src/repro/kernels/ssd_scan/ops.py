@@ -1,0 +1,17 @@
+"""Public jit'd wrapper for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import INTERPRET
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a_log, bmat, cmat, chunk: int = 128):
+    """SSD scan. x: (B,S,H,P); dt: (B,S,H); a_log: (H,); B/C: (B,S,N).
+    Returns (y (B,S,H,P) f32, h_final (B,H,P,N) f32)."""
+    return ssd_scan_pallas(x, dt, a_log, bmat, cmat, chunk=chunk,
+                           interpret=INTERPRET)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the SSD chunked scan: the naive token recurrence."""
+from repro.models.mamba2 import ssd_reference
+
+
+def ssd_scan_ref(x, dt, a_log, bmat, cmat):
+    """x: (B,S,H,P); dt: (B,S,H) f32; a_log: (H,); B/C: (B,S,N).
+
+    Returns (y (B,S,H,P) f32, h_final (B,H,P,N) f32).
+    """
+    return ssd_reference(x, dt, a_log, bmat, cmat)

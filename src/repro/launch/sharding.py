@@ -1,0 +1,184 @@
+"""Sharding rules: param / cache / input PartitionSpecs per (arch × mesh).
+
+Policy (DESIGN.md §4):
+* batch over ("pod","data"); TP (heads / FFN columns) over "model".
+* training adds FSDP: the d_model dim of big matrices shards over "data"
+  (XLA inserts per-layer all-gathers — ZeRO-3 semantics).
+* MoE experts: per pick_lep_plan — full-mesh EP when E divides the pod
+  (deepseek: one expert per die), else model-axis EP with the FFN dim over
+  "data" when replication would blow HBM (kimi-k2 1T).
+* decode KV/latent/SSM caches: batch over "data", sequence (or SSM heads)
+  over "model" — the TPU analogue of the paper's UB-pooled uniform-access
+  cache (softmax over the sharded seq axis lowers to all-reduces).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.lep import pick_lep_plan
+from repro.models.attention import KVCache
+from repro.models.mamba2 import SSMState
+from repro.models.model import build_plan
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, mesh: Mesh, axes) -> bool:
+    if not axes:
+        return False
+    size = math.prod(mesh.shape[a] for a in (axes if isinstance(axes, tuple) else (axes,)))
+    return n % size == 0
+
+
+def _maybe(axis, n, mesh):
+    """Use axis only if dimension n divides evenly (else replicate)."""
+    return axis if axis and _div(n, mesh, axis) else None
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
+                 train: bool = False) -> Any:
+    """PartitionSpec pytree matching init_params structure."""
+    fsdp = "data" if train else None
+    lep = pick_lep_plan(cfg, mesh) if cfg.is_moe else None
+
+    def attn_spec(name: str, shape) -> P:
+        d = cfg.d_model
+        if name in ("wq", "wk", "wv"):
+            return P(None, _maybe(fsdp, d, mesh), _maybe("model", shape[-1], mesh))
+        if name == "wo":
+            return P(None, _maybe("model", shape[1], mesh), _maybe(fsdp, d, mesh))
+        if name in ("bq", "bk", "bv"):
+            return P(None, _maybe("model", shape[-1], mesh))
+        if name in ("wq_a",):
+            return P(None, _maybe(fsdp, d, mesh), _maybe("model", shape[-1], mesh))
+        if name in ("wq_b", "wk_b", "wv_b"):
+            return P(None, None, _maybe("model", shape[-1], mesh))
+        if name == "wkv_a":
+            return P(None, _maybe(fsdp, d, mesh), None)
+        return P()  # norms, gains
+
+    def moe_spec(name: str, shape) -> P:
+        ep = lep["ep_axes"]
+        ffn = lep["ffn_shard_axis"]
+        if name in ("w_gate", "w_up"):
+            return P(None, ep, None, _maybe(ffn, shape[-1], mesh))
+        if name == "w_down":
+            return P(None, ep, _maybe(ffn, shape[2], mesh), None)
+        if name in ("shared_gate", "shared_up"):
+            return P(None, _maybe(fsdp, shape[1], mesh), _maybe("model", shape[-1], mesh))
+        if name == "shared_down":
+            return P(None, _maybe("model", shape[1], mesh), _maybe(fsdp, shape[-1], mesh))
+        return P()  # router, ln — replicated
+
+    def mamba_spec(name: str, shape) -> P:
+        if name == "in_proj":
+            return P(None, _maybe(fsdp, shape[1], mesh), _maybe("model", shape[-1], mesh))
+        if name == "out_proj":
+            return P(None, _maybe("model", shape[1], mesh), _maybe(fsdp, shape[-1], mesh))
+        return P()
+
+    def walk(tree, ctx=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k if k in ("attn", "mlp", "moe", "mamba")
+                            else ctx) for k, v in tree.items()}
+        return tree
+
+    # build spec tree mirroring params via path traversal
+    def spec_of(path, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        leafname = names[-1]
+        shape = leaf.shape
+        if leafname == "embed":
+            return P(_maybe("model", shape[0], mesh), None)
+        if leafname == "lm_head":
+            return P(None, _maybe("model", shape[-1], mesh))
+        if leafname == "final_norm":
+            return P()
+        if "moe" in names:
+            return moe_spec(leafname, shape)
+        if "mamba" in names:
+            return mamba_spec(leafname, shape)
+        if "attn" in names:
+            return attn_spec(leafname, shape)
+        if "mlp" in names:
+            if leafname in ("w_gate", "w_up"):
+                return P(None, _maybe(fsdp, shape[1], mesh),
+                         _maybe("model", shape[-1], mesh))
+            if leafname == "w_down":
+                return P(None, _maybe("model", shape[1], mesh),
+                         _maybe(fsdp, shape[-1], mesh))
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, caches_shape: Any) -> Any:
+    """Decode caches: batch over data, sequence / wide dims over model."""
+    specs: Dict[str, Any] = {}
+    for seg in build_plan(cfg):
+        c = caches_shape[seg.name]
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                arr = c["mla"]
+                specs[seg.name] = {
+                    "mla": P(None, _maybe("data", arr.shape[1], mesh),
+                             _maybe("model", arr.shape[2], mesh), None),
+                    "length": P(),
+                }
+            else:
+                sh = c.k.shape
+                spec = P(None, _maybe("data", sh[1], mesh),
+                         _maybe("model", sh[2], mesh), None, None)
+                specs[seg.name] = KVCache(spec, spec, P())
+        elif seg.kind == "mamba_tail":
+            hsh = c.h.shape
+            csh = c.conv.shape
+            specs[seg.name] = SSMState(
+                P(None, _maybe("data", hsh[1], mesh),
+                  _maybe("model", hsh[2], mesh), None, None),
+                P(None, _maybe("data", csh[1], mesh), None,
+                  _maybe("model", csh[-1], mesh)),
+                P())
+        else:
+            hsh = c["ssm"]["h"].shape
+            csh = c["ssm"]["conv"].shape
+            ksh = c["shared_kv"].k.shape
+            kvspec = P(None, _maybe("data", ksh[1], mesh),
+                       _maybe("model", ksh[2], mesh), None, None)
+            specs[seg.name] = {
+                "ssm": {
+                    "h": P(None, None, _maybe("data", hsh[2], mesh),
+                           _maybe("model", hsh[3], mesh), None, None),
+                    "conv": P(None, None, _maybe("data", csh[2], mesh),
+                              None, _maybe("model", csh[-1], mesh)),
+                    "length": P(),
+                },
+                "length": P(),
+                "shared_kv": KVCache(kvspec, kvspec, P()),
+            }
+    return specs
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, batch_shape: Dict[str, Any]) -> Dict[str, Any]:
+    dp = dp_axes(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        b = v.shape[0]
+        ax = dp if _div(b, mesh, dp) else (
+            ("data",) if _div(b, mesh, ("data",)) else None)
+        out[k] = P(ax, *([None] * (v.ndim - 1)))
+    return out
+
+
+def to_shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,12 @@
+from repro.mempool.pool import (  # noqa: F401
+    MemoryPool,
+    MPController,
+    MPServer,
+    OBS_STORE,
+    PlaneModel,
+    SSD_TIER,
+    UB_PLANE,
+    VPC_PLANE,
+)
+from repro.mempool.context_cache import ContextCache  # noqa: F401
+from repro.mempool.model_cache import ModelCache, ModelMeta  # noqa: F401

@@ -1,0 +1,79 @@
+"""EMS Context Caching (paper §4.4.2): prefix-hashed KV block reuse.
+
+Historical KV caches are organized into paged blocks (default 128 tokens);
+each block's key is a content hash chained over the prefix ("augmented with a
+prefix hash to enable content-addressable indexing"), so identical prefixes
+dedup to one stored copy regardless of which request produced them. The
+prefill engine queries the longest cached prefix, loads those blocks over the
+UB plane, and computes only the suffix (Fig. 23's reuse-rate mechanics).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.mempool.pool import MemoryPool
+
+
+def _block_keys(tokens: Sequence[int], block: int, model_tag: str) -> List[str]:
+    """Prefix-chained content hashes, one per complete block."""
+    keys = []
+    h = hashlib.sha256(model_tag.encode())
+    n_full = len(tokens) // block
+    for b in range(n_full):
+        chunk = np.asarray(tokens[b * block:(b + 1) * block], np.int32)
+        h = hashlib.sha256(h.digest() + chunk.tobytes())
+        keys.append("cc:" + h.hexdigest())
+    return keys
+
+
+class ContextCache:
+    def __init__(self, pool: MemoryPool, block_tokens: int = 128,
+                 namespace: str = "context", model_tag: str = "model"):
+        self.pool = pool
+        self.block = block_tokens
+        self.ns = namespace
+        self.model_tag = model_tag
+        self.dedup_skipped = 0
+        self.stored_blocks = 0
+
+    # -- prefill-side: longest reusable prefix ------------------------------
+    def match_prefix(self, tokens: Sequence[int]) -> Tuple[int, List[str]]:
+        """Returns (#reusable tokens, keys of matched blocks)."""
+        keys = _block_keys(tokens, self.block, self.model_tag)
+        matched: List[str] = []
+        for k in keys:
+            if self.pool.contains(k):
+                matched.append(k)
+            else:
+                break
+        return len(matched) * self.block, matched
+
+    def fetch(self, keys: List[str]) -> List[np.ndarray]:
+        out = []
+        for k in keys:
+            v = self.pool.get(k)
+            assert v is not None, "matched block vanished (eviction race)"
+            out.append(v)
+        return out
+
+    # -- store computed KV blocks (async in the real system) ----------------
+    def store(self, tokens: Sequence[int], kv_blocks: Sequence[np.ndarray]) -> int:
+        """kv_blocks[i] is the KV payload of tokens[i*block:(i+1)*block].
+        Deduplicates: already-present blocks are skipped. Returns #stored."""
+        keys = _block_keys(tokens, self.block, self.model_tag)
+        stored = 0
+        for k, payload in zip(keys, kv_blocks):
+            if self.pool.contains(k):
+                self.dedup_skipped += 1
+                continue
+            if self.pool.put(k, np.asarray(payload), self.ns):
+                stored += 1
+                self.stored_blocks += 1
+        return stored
+
+    # Decode-side storage policy (paper: reasoning models skip it).
+    def should_store_decode(self, is_reasoning_model: bool) -> bool:
+        return not is_reasoning_model

@@ -1,0 +1,9 @@
+from repro.models.model import (  # noqa: F401
+    build_plan,
+    decode_step,
+    forward,
+    init_params,
+    lm_loss,
+    make_caches,
+    prefill,
+)

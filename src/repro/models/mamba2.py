@@ -1,0 +1,193 @@
+"""Mamba2 block — SSD (state-space duality) chunked scan. [arXiv:2405.21060]
+
+Prefill uses the exact chunked SSD algorithm: quadratic attention-like intra-
+chunk term + sequential inter-chunk state recurrence (one lax.scan carrying
+the (B, H, P, N) state). Decode is the O(1) recurrence. The attention-free
+path is what makes the ``long_500k`` shape native for mamba2/zamba2 (see
+DESIGN.md §3); ``ssd_reference`` (naive token-level recurrence) is the test
+oracle, and kernels/ssd_scan provides the Pallas intra-chunk kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+class SSMState(NamedTuple):
+    h: jax.Array       # (L, B, H, P, N) recurrent state
+    conv: jax.Array    # (L, B, conv-1, conv_channels) rolling conv inputs
+    length: jax.Array  # scalar int32
+
+
+def init_mamba_params(key, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    d = cfg.d_model
+    din = d * cfg.ssm_expand
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((n_layers, d), dtype),
+        # in_proj -> [z (din), x (din), B (n), C (n), dt (h)]
+        "in_proj": dense_init(ks[0], (n_layers, d, 2 * din + 2 * n + h), dtype),
+        "conv_w": dense_init(ks[1], (n_layers, cfg.ssm_conv, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((n_layers, conv_ch), dtype),
+        "dt_bias": jnp.zeros((n_layers, h), jnp.float32),
+        "A_log": jnp.zeros((n_layers, h), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((n_layers, h), jnp.float32),
+        "norm_gain": jnp.ones((n_layers, din), dtype),
+        "out_proj": dense_init(ks[2], (n_layers, din, d), dtype),
+    }
+
+
+def _split_proj(p: dict, x: jax.Array, cfg: ModelConfig):
+    din = cfg.d_model * cfg.ssm_expand
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din: 2 * din + 2 * n]
+    dt_raw = zxbcdt[..., 2 * din + 2 * n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    return z, xbc, dt  # dt: (b,s,h) f32
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. xbc: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K is tiny (4); unrolled taps
+        out = out + pad[:, i: i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_reference(x, dt, a_log, bmat, cmat):
+    """Naive per-token recurrence (oracle). x: (B,S,H,P); B/C: (B,S,N)."""
+    a = -jnp.exp(a_log)                                     # (H,)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                               # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * a)[..., None, None]           # (B,H,1,1)
+        h = h * decay + (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    b, s, h, pdim = x.shape
+    n = bmat.shape[-1]
+    h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(bmat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(cmat, 1, 0).astype(jnp.float32))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT                       # (B,S,H,P), (B,H,P,N)
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int, h0=None):
+    """Exact chunked SSD. Shapes as ssd_reference. Returns (y, h_final)."""
+    b, s, h, pdim = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+    a = -jnp.exp(a_log)
+    dta = dt * a                                             # (b,s,h) f32, <=0
+
+    xc = x.reshape(b, nc, q, h, pdim).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h)
+    dtac = dta.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cum = jnp.cumsum(dtac, axis=2)                           # (b,nc,q,h)
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, pdim, n), jnp.float32)
+
+    idx = jnp.arange(q)
+    causal = idx[:, None] >= idx[None, :]                    # (q,k)
+
+    def body(hstate, inp):
+        x_c, dt_c, cum_c, b_c, c_c = inp                     # leading dim b
+        decay_out = jnp.exp(cum_c)                           # (b,q,h)
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", c_c, hstate) * decay_out[..., None]
+        lmat = jnp.exp(cum_c[:, :, None, :] - cum_c[:, None, :, :])  # (b,q,k,h)
+        cb = jnp.einsum("bqn,bkn->bqk", c_c, b_c)
+        w = cb[..., None] * lmat * dt_c[:, None, :, :]
+        w = jnp.where(causal[None, :, :, None], w, 0.0)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", w, x_c)
+        decay_to_end = jnp.exp(cum_c[:, -1:, :] - cum_c)     # (b,q,h)
+        contrib = jnp.einsum("bqh,bqhp,bqn->bhpn", decay_to_end * dt_c, x_c, b_c)
+        hstate = hstate * jnp.exp(cum_c[:, -1, :])[:, :, None, None] + contrib
+        return hstate, y_inter + y_intra
+
+    seq = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0), jnp.moveaxis(cum, 1, 0),
+           jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+    h_final, ys = jax.lax.scan(body, h0, seq)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, pdim)
+    return y, h_final
+
+
+def mamba_prefill(p: dict, x: jax.Array, cfg: ModelConfig
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (B,S,D). Returns (out (B,S,D), h_state, conv_state)."""
+    bsz, s, d = x.shape
+    din = d * cfg.ssm_expand
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    z, xbc_raw, dt = _split_proj(p, x, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xin = xbc[..., :din].reshape(bsz, s, h, cfg.ssm_head_dim)
+    bmat = xbc[..., din: din + n]
+    cmat = xbc[..., din + n:]
+    y, h_final = ssd_chunked(xin, dt, p["A_log"], bmat, cmat, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None] * xin.astype(jnp.float32)
+    y = y.reshape(bsz, s, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                 p["norm_gain"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    # conv state: last (K-1) raw xbc inputs
+    k = cfg.ssm_conv
+    conv_state = xbc_raw[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    return out, h_final, conv_state
+
+
+def mamba_decode(p: dict, x: jax.Array, h_state: jax.Array, conv_state: jax.Array,
+                 cfg: ModelConfig) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One token. x: (B,1,D); h_state: (B,H,P,N); conv_state: (B,K-1,C)."""
+    bsz, _, d = x.shape
+    din = d * cfg.ssm_expand
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    z, xbc_raw, dt = _split_proj(p, x, cfg)                  # seq dim = 1
+    window = jnp.concatenate([conv_state, xbc_raw], axis=1)  # (B,K,C)
+    new_conv_state = window[:, 1:, :]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)
+    xin = xbc[..., :din].reshape(bsz, h, cfg.ssm_head_dim)
+    bmat, cmat = xbc[..., din: din + n], xbc[..., din + n:]
+    a = -jnp.exp(p["A_log"])
+    dtt = dt[:, 0]                                           # (B,H)
+    decay = jnp.exp(dtt * a)[..., None, None]
+    h_state = h_state * decay + (dtt[..., None] * xin)[..., None] * bmat[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h_state, cmat)
+    y = y + p["D"][None, :, None] * xin
+    y = y.reshape(bsz, 1, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(z.dtype),
+                 p["norm_gain"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, h_state, new_conv_state
+
+
+def make_ssm_state(cfg: ModelConfig, n_layers: int, batch: int) -> SSMState:
+    din = cfg.d_model * cfg.ssm_expand
+    conv_ch = din + 2 * cfg.ssm_state
+    return SSMState(
+        h=jnp.zeros((n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32),
+        conv=jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_ch), jnp.bfloat16),
+        length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,506 @@
+"""Unified transformer assembly for every assigned architecture family.
+
+The model is organized as *segments* of structurally-identical layers; each
+segment's parameters are stacked on a leading layer axis and executed with
+``jax.lax.scan`` (keeps 512-device dry-run compiles tractable and HLO small).
+
+Families → segment plans:
+  dense / vlm / audio : [dense × L]
+  moe                 : [dense × first_k_dense] + [moe × (L - k)]
+  ssm                 : [mamba × L]
+  hybrid (zamba2)     : [mamba groups of ``attn_every`` + one *shared* attention
+                         block applied after each group] + [mamba tail]
+
+Three entry points: ``forward`` (full-sequence, training), ``prefill``
+(full-sequence + cache materialization), ``decode_step`` (one token).
+MoE execution is pluggable via ``moe_fn`` — default is the single-device
+capacity implementation; ``core/lep.py`` supplies the shard_map LEP version.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+from repro.models.scan_util import scan_unroll  # noqa: E402
+
+
+def _scan(body, init, xs):
+    return jax.lax.scan(body, init, xs, unroll=scan_unroll())
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.attention import KVCache
+from repro.models.layers import dense_init, rms_norm, swiglu
+from repro.models.mamba2 import SSMState
+
+MoeFn = Callable[[dict, jax.Array, ModelConfig], Tuple[jax.Array, Dict[str, jax.Array]]]
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    name: str
+    kind: str        # dense | moe | mamba_groups | mamba_tail
+    n_layers: int    # layers in this segment (groups*per_group for mamba_groups)
+    per_group: int = 0
+
+
+def build_plan(cfg: ModelConfig) -> List[Segment]:
+    if cfg.is_hybrid:
+        groups = cfg.num_layers // cfg.attn_every
+        tail = cfg.num_layers % cfg.attn_every
+        plan = [Segment("mamba_groups", "mamba_groups",
+                        groups * cfg.attn_every, cfg.attn_every)]
+        if tail:
+            plan.append(Segment("mamba_tail", "mamba_tail", tail))
+        return plan
+    if cfg.is_ssm:
+        return [Segment("mamba", "mamba_tail", cfg.num_layers)]
+    if cfg.is_moe:
+        plan = []
+        if cfg.first_k_dense:
+            plan.append(Segment("dense_lead", "dense", cfg.first_k_dense))
+        plan.append(Segment("moe", "moe", cfg.num_layers - cfg.first_k_dense))
+        return plan
+    return [Segment("dense", "dense", cfg.num_layers)]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: ModelConfig, n_layers: int, dtype):
+    if cfg.attention_kind == "mla":
+        return mla_mod.init_mla_params(key, cfg, n_layers, dtype)
+    return attn_mod.init_attention_params(key, cfg, n_layers, dtype)
+
+
+def _init_mlp(key, cfg: ModelConfig, n_layers: int, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "ln": jnp.ones((n_layers, d), dtype),
+        "w_gate": dense_init(ks[0], (n_layers, d, f), dtype),
+        "w_up": dense_init(ks[1], (n_layers, d, f), dtype),
+        "w_down": dense_init(ks[2], (n_layers, f, d), dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dtype = _dtype(cfg)
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan) + 4)
+    params: dict = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype, scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "segments": {},
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size), dtype)
+    for i, seg in enumerate(plan):
+        k = keys[2 + i]
+        if seg.kind == "dense":
+            ka, km = jax.random.split(k)
+            params["segments"][seg.name] = {
+                "attn": _init_attn(ka, cfg, seg.n_layers, dtype),
+                "mlp": _init_mlp(km, cfg, seg.n_layers, dtype),
+            }
+        elif seg.kind == "moe":
+            ka, km = jax.random.split(k)
+            params["segments"][seg.name] = {
+                "attn": _init_attn(ka, cfg, seg.n_layers, dtype),
+                "moe": moe_mod.init_moe_params(km, cfg, seg.n_layers, dtype),
+            }
+        else:  # mamba_groups / mamba_tail
+            params["segments"][seg.name] = {
+                "mamba": mamba_mod.init_mamba_params(k, cfg, seg.n_layers, dtype),
+            }
+    if cfg.is_hybrid:
+        ka, km = jax.random.split(keys[-1])
+        params["shared_attn"] = {
+            "attn": _init_attn(ka, cfg, 1, dtype),
+            "mlp": _init_mlp(km, cfg, 1, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    if cfg.frontend == "audio_frames":
+        return batch["frames"].astype(_dtype(cfg))
+    x = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision_patches" and "prefix_emb" in batch:
+        x = jnp.concatenate([batch["prefix_emb"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("...d,dv->...v", x, head)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer blocks (single-layer params)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_prefill(pl_attn, x, cfg, positions):
+    h = rms_norm(x, pl_attn["ln"], cfg.norm_eps)
+    if cfg.attention_kind == "mla":
+        mode = os.environ.get("REPRO_MLA_HYBRID", "")
+        if mode in ("a2a", "rs"):
+            # Paper §4.3.1 staged hybrid parallelism (SP→TP→SP) — enabled
+            # for prefill when a mesh context is active (launch/variants).
+            from repro.core.parallel import get_current_mesh
+            mesh = get_current_mesh()
+            if mesh is not None:
+                from repro.core.hybrid_parallel import mla_prefill_hybrid
+                out, latent = mla_prefill_hybrid(pl_attn, h, cfg, mesh,
+                                                 oproj_mode=mode)
+                return x + out, latent
+        out, latent = mla_mod.mla_prefill(pl_attn, h, cfg, positions)
+        return x + out, latent
+    out, (k, v) = attn_mod.attention_prefill(pl_attn, h, cfg, positions)
+    return x + out, (k, v)
+
+
+def _attn_block_decode(pl_attn, x, cfg, cache_k, cache_v, cache_len, ring):
+    h = rms_norm(x, pl_attn["ln"], cfg.norm_eps)
+    if cfg.attention_kind == "mla":
+        out, new_cache = mla_mod.mla_decode(pl_attn, h, cache_k, cache_len, cfg)
+        return x + out, new_cache, None
+    out, ck, cv = attn_mod.attention_decode(pl_attn, h, cache_k, cache_v,
+                                            cache_len, cfg, ring)
+    return x + out, ck, cv
+
+
+def _mlp_block(pl_mlp, x, cfg):
+    h = rms_norm(x, pl_mlp["ln"], cfg.norm_eps)
+    return x + swiglu(h, pl_mlp["w_gate"], pl_mlp["w_up"], pl_mlp["w_down"])
+
+
+def _moe_block(pl_moe, x, cfg, moe_fn: MoeFn):
+    b, s, d = x.shape
+    h = rms_norm(x, pl_moe["ln"], cfg.norm_eps)
+    out, aux = moe_fn(pl_moe, h.reshape(b * s, d), cfg)
+    return x + out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence execution (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _seg_full(seg: Segment, seg_params: dict, shared_attn, x, cfg: ModelConfig,
+              moe_fn: MoeFn, positions, want_cache: bool):
+    """Run a segment over the full sequence via lax.scan over layers."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if seg.kind in ("dense", "moe"):
+        def body(carry, pl):
+            h, aux = carry
+            h, cache = _attn_block_prefill(pl["attn"], h, cfg, positions)
+            if seg.kind == "moe":
+                h, a = _moe_block(pl["moe"], h, cfg, moe_fn)
+                aux = aux + a["aux_loss"]
+            else:
+                h = _mlp_block(pl["mlp"], h, cfg)
+            ys = cache if want_cache else None
+            return (h, aux), ys
+
+        (x, aux), caches = _scan(body, (x, aux0), seg_params)
+        return x, aux, caches
+
+    if seg.kind == "mamba_tail":
+        def body(carry, pl):
+            h, aux = carry
+            hin = rms_norm(h, pl["mamba"]["ln"], cfg.norm_eps)
+            out, hstate, conv = mamba_mod.mamba_prefill(pl["mamba"], hin, cfg)
+            ys = (hstate, conv) if want_cache else None
+            return (h + out, aux), ys
+
+        (x, aux), caches = _scan(body, (x, aux0), seg_params)
+        return x, aux, caches
+
+    # mamba_groups: scan over groups; each group = per_group mamba layers
+    # (inner scan) followed by the *shared* attention block (closure params).
+    g = seg.n_layers // seg.per_group
+    grouped = jax.tree.map(
+        lambda a: a.reshape((g, seg.per_group) + a.shape[1:]), seg_params)
+
+    def group_body(carry, pl_group):
+        h, aux = carry
+
+        def inner(hc, pl):
+            hin = rms_norm(hc, pl["mamba"]["ln"], cfg.norm_eps)
+            out, hstate, conv = mamba_mod.mamba_prefill(pl["mamba"], hin, cfg)
+            return hc + out, (hstate, conv) if want_cache else None
+
+        h, mcaches = _scan(inner, h, pl_group)
+        pl_sa = jax.tree.map(lambda a: a[0], shared_attn)
+        h, kv = _attn_block_prefill(pl_sa["attn"], h, cfg, positions)
+        h = _mlp_block(pl_sa["mlp"], h, cfg)
+        ys = (mcaches, kv) if want_cache else None
+        return (h, aux), ys
+
+    (x, aux), caches = _scan(group_body, (x, aux0), grouped)
+    return x, aux, caches
+
+
+def forward(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            moe_fn: Optional[MoeFn] = None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence forward (no cache). Returns (logits, aux)."""
+    moe_fn = moe_fn or moe_mod.moe_capacity
+    x = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg in build_plan(cfg):
+        x, aux, _ = _seg_full(seg, params["segments"][seg.name],
+                              params.get("shared_attn"), x, cfg, moe_fn,
+                              positions, want_cache=False)
+        aux_total = aux_total + aux
+    logits = unembed(params, cfg, x)
+    return logits, {"aux_loss": aux_total}
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+def make_caches(cfg: ModelConfig, batch: int, capacity: int,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    caches: Dict[str, Any] = {}
+    for seg in build_plan(cfg):
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                caches[seg.name] = {
+                    "mla": mla_mod.make_mla_cache(cfg, seg.n_layers, batch, capacity, dtype),
+                    "length": jnp.zeros((), jnp.int32),
+                }
+            else:
+                cap = cfg.sliding_window if attn_mod.is_ring(cfg, capacity) else capacity
+                kvshape = (seg.n_layers, batch, cap, cfg.num_kv_heads, cfg.head_dim)
+                caches[seg.name] = KVCache(jnp.zeros(kvshape, dtype),
+                                           jnp.zeros(kvshape, dtype),
+                                           jnp.zeros((), jnp.int32))
+        elif seg.kind == "mamba_tail":
+            caches[seg.name] = mamba_mod.make_ssm_state(cfg, seg.n_layers, batch)
+        else:  # mamba_groups
+            g = seg.n_layers // seg.per_group
+            din = cfg.d_model * cfg.ssm_expand
+            conv_ch = din + 2 * cfg.ssm_state
+            caches[seg.name] = {
+                "ssm": {
+                    "h": jnp.zeros((g, seg.per_group, batch, cfg.ssm_heads,
+                                    cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                    "conv": jnp.zeros((g, seg.per_group, batch,
+                                       cfg.ssm_conv - 1, conv_ch), jnp.bfloat16),
+                    "length": jnp.zeros((), jnp.int32),
+                },
+                "length": jnp.zeros((), jnp.int32),
+            }
+            cap = cfg.sliding_window if attn_mod.is_ring(cfg, capacity) else capacity
+            kvshape = (g, batch, cap, cfg.num_kv_heads, cfg.head_dim)
+            caches[seg.name]["shared_kv"] = KVCache(
+                jnp.zeros(kvshape, dtype), jnp.zeros(kvshape, dtype),
+                jnp.zeros((), jnp.int32))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Decode step (one new token per request)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                caches: Dict[str, Any], cache_len: jax.Array,
+                moe_fn: Optional[MoeFn] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: (B, 1) int32. Returns (logits (B, V), updated caches)."""
+    moe_fn = moe_fn or moe_mod.moe_capacity
+    x = params["embed"][tokens].astype(_dtype(cfg))           # (B,1,D)
+    new_caches: Dict[str, Any] = {}
+    for seg in build_plan(cfg):
+        seg_params = params["segments"][seg.name]
+        cache = caches[seg.name]
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                def body(h, xs):
+                    pl, c = xs
+                    hin = rms_norm(h, pl["attn"]["ln"], cfg.norm_eps)
+                    out, nc = mla_mod.mla_decode(pl["attn"], hin, c, cache_len, cfg)
+                    h2 = h + out
+                    if seg.kind == "moe":
+                        h2, _ = _moe_block(pl["moe"], h2, cfg, moe_fn)
+                    else:
+                        h2 = _mlp_block(pl["mlp"], h2, cfg)
+                    return h2, nc
+
+                x, new_mla = _scan(body, x, (seg_params, cache["mla"]))
+                new_caches[seg.name] = {"mla": new_mla, "length": cache_len + 1}
+            else:
+                ring = (cfg.sliding_window is not None
+                        and cache.k.shape[2] == cfg.sliding_window)
+
+                def body(h, xs):
+                    pl, ck, cv = xs
+                    h2, nk, nv = _attn_block_decode(pl["attn"], h, cfg, ck, cv,
+                                                    cache_len, ring)
+                    if seg.kind == "moe":
+                        h2, _ = _moe_block(pl["moe"], h2, cfg, moe_fn)
+                    else:
+                        h2 = _mlp_block(pl["mlp"], h2, cfg)
+                    return h2, (nk, nv)
+
+                x, (nk, nv) = _scan(body, x, (seg_params, cache.k, cache.v))
+                new_caches[seg.name] = KVCache(nk, nv, cache_len + 1)
+        elif seg.kind == "mamba_tail":
+            def body(h, xs):
+                pl, hs, cs = xs
+                hin = rms_norm(h, pl["mamba"]["ln"], cfg.norm_eps)
+                out, nhs, ncs = mamba_mod.mamba_decode(pl["mamba"], hin, hs, cs, cfg)
+                return h + out, (nhs, ncs)
+
+            x, (nh, nc) = _scan(body, x, (seg_params, cache.h, cache.conv))
+            new_caches[seg.name] = SSMState(nh, nc, cache_len + 1)
+        else:  # mamba_groups
+            g = seg.n_layers // seg.per_group
+            grouped = jax.tree.map(
+                lambda a: a.reshape((g, seg.per_group) + a.shape[1:]), seg_params)
+            ring = bool(cfg.sliding_window) and \
+                cache["shared_kv"].k.shape[2] == cfg.sliding_window
+
+            def group_body(h, xs):
+                pl_group, hs, cs, ck, cv = xs
+
+                def inner(hc, ys):
+                    pl, hs1, cs1 = ys
+                    hin = rms_norm(hc, pl["mamba"]["ln"], cfg.norm_eps)
+                    out, nhs, ncs = mamba_mod.mamba_decode(pl["mamba"], hin, hs1, cs1, cfg)
+                    return hc + out, (nhs, ncs)
+
+                h, (nhs, ncs) = _scan(inner, h, (pl_group, hs, cs))
+                pl_sa = jax.tree.map(lambda a: a[0], params["shared_attn"])
+                h, nk, nv = _attn_block_decode(pl_sa["attn"], h, cfg, ck, cv,
+                                               cache_len, ring)
+                h = _mlp_block(pl_sa["mlp"], h, cfg)
+                return h, (nhs, ncs, nk, nv)
+
+            ssm = cache["ssm"]
+            x, (nhs, ncs, nk, nv) = _scan(
+                group_body, x,
+                (grouped, ssm["h"], ssm["conv"],
+                 cache["shared_kv"].k, cache["shared_kv"].v))
+            new_caches[seg.name] = {
+                "ssm": {"h": nhs, "conv": ncs, "length": ssm["length"] + 1},
+                "length": cache_len + 1,
+                "shared_kv": KVCache(nk, nv, cache_len + 1),
+            }
+    logits = unembed(params, cfg, x[:, 0:1, :])[:, 0, :]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full sequence + cache materialization)
+# ---------------------------------------------------------------------------
+
+
+def _write_kv(tmpl: jax.Array, k: jax.Array, s: int, cache_dtype) -> jax.Array:
+    """Write freshly-computed K or V (L,B,S,KV,hd) into a capacity buffer.
+
+    Ring buffers (sliding-window serving at long context) place token p at
+    slot p % cap, matching attention_decode's write pattern.
+    """
+    cap = tmpl.shape[2]
+    if s <= cap:
+        return jax.lax.dynamic_update_slice_in_dim(
+            tmpl, k.astype(cache_dtype), 0, axis=2)
+    last = k[:, :, -cap:].astype(cache_dtype)
+    return jnp.roll(last, shift=s % cap, axis=2)
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            capacity: int, moe_fn: Optional[MoeFn] = None,
+            cache_dtype=jnp.bfloat16) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the prompt, return (logits (B,S,V), caches padded to capacity)."""
+    moe_fn = moe_fn or moe_mod.moe_capacity
+    x = embed_inputs(params, cfg, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    caches = make_caches(cfg, b, capacity, cache_dtype)
+    new_caches: Dict[str, Any] = {}
+    for seg in build_plan(cfg):
+        x, _aux, segc = _seg_full(seg, params["segments"][seg.name],
+                                  params.get("shared_attn"), x, cfg, moe_fn,
+                                  positions, want_cache=True)
+        tmpl = caches[seg.name]
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                buf = jax.lax.dynamic_update_slice_in_dim(
+                    tmpl["mla"], segc.astype(cache_dtype), 0, axis=2)
+                new_caches[seg.name] = {"mla": buf,
+                                        "length": jnp.int32(s)}
+            else:
+                k, v = segc
+                new_caches[seg.name] = KVCache(
+                    _write_kv(tmpl.k, k, s, cache_dtype),
+                    _write_kv(tmpl.v, v, s, cache_dtype), jnp.int32(s))
+        elif seg.kind == "mamba_tail":
+            hstate, conv = segc
+            new_caches[seg.name] = SSMState(hstate, conv.astype(tmpl.conv.dtype),
+                                            jnp.int32(s))
+        else:
+            (mh, mconv), (k, v) = segc
+            nk = _write_kv(tmpl["shared_kv"].k, k, s, cache_dtype)
+            nv = _write_kv(tmpl["shared_kv"].v, v, s, cache_dtype)
+            new_caches[seg.name] = {
+                "ssm": {"h": mh, "conv": mconv.astype(jnp.bfloat16),
+                        "length": jnp.int32(s)},
+                "length": jnp.int32(s),
+                "shared_kv": KVCache(nk, nv, jnp.int32(s)),
+            }
+    logits = unembed(params, cfg, x)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(params: dict, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            moe_fn: Optional[MoeFn] = None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(params, cfg, batch, moe_fn)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_patches" and "prefix_emb" in batch:
+        logits = logits[:, batch["prefix_emb"].shape[1]:, :]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    nll = jnp.mean(lse - gold)
+    loss = nll + cfg.router_aux_loss_coef * aux["aux_loss"]
+    return loss, {"nll": nll, **aux}

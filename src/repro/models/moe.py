@@ -1,0 +1,134 @@
+"""MoE layer: top-k router, shared experts, and two reference executions.
+
+* ``moe_reference`` — dense all-experts compute (exact, O(T·E) FLOPs); the
+  oracle for everything else.
+* ``moe_capacity`` — static capacity-bounded gather→expert→scatter, the
+  single-device semantics of the paper's FusedDispatch/FusedCombine static
+  pre-allocated buffers (paper Eq. 1–2). ``core/lep.py`` wraps this with
+  shard_map + all_to_all (+ early INT8 quantization) for large-scale EP.
+
+Router follows DeepSeek/OLMoE practice: softmax → top-k → renormalize, with a
+Switch-style load-balance auxiliary loss (the serving-side analogue of the
+paper's EPLB is in core/lep.py via redundant expert replicas).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, swiglu
+
+
+def init_moe_params(key, cfg: ModelConfig, n_layers: int, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "ln": jnp.ones((n_layers, d), dtype),
+        "router": dense_init(ks[0], (n_layers, d, e), jnp.float32),
+        "w_gate": dense_init(ks[1], (n_layers, e, d, f), dtype),
+        "w_up": dense_init(ks[2], (n_layers, e, d, f), dtype),
+        "w_down": dense_init(ks[3], (n_layers, e, f, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared_gate"] = dense_init(ks[4], (n_layers, d, fs), dtype)
+        p["shared_up"] = dense_init(ks[5], (n_layers, d, fs), dtype)
+        p["shared_down"] = dense_init(ks[6], (n_layers, fs, d), dtype)
+    return p
+
+
+def route(router_w: jax.Array, x: jax.Array, cfg: ModelConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (T, D) -> (top-k ids (T,K), renormalized probs (T,K), aux loss)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    e = cfg.num_experts
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=1), axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac * mean_p)
+    return top_i, top_p, aux
+
+
+def _shared_out(p: dict, x: jax.Array) -> jax.Array:
+    if "shared_gate" not in p:
+        return jnp.zeros_like(x)
+    return swiglu(x, p["shared_gate"], p["shared_up"], p["shared_down"])
+
+
+def moe_reference(p: dict, x: jax.Array, cfg: ModelConfig
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Dense all-experts oracle. x: (T, D)."""
+    top_i, top_p, aux = route(p["router"], x, cfg)
+    g = jnp.einsum("td,edf->tef", x, p["w_gate"])
+    u = jnp.einsum("td,edf->tef", x, p["w_up"])
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, p["w_down"])
+    w = jnp.sum(
+        jax.nn.one_hot(top_i, cfg.num_experts, dtype=jnp.float32)
+        * top_p[..., None], axis=1)                                # (T, E)
+    out = jnp.einsum("ted,te->td", y.astype(jnp.float32), w).astype(x.dtype)
+    return out + _shared_out(p, x), {"aux_loss": aux}
+
+
+def capacity_for(cfg: ModelConfig, n_tokens: int, ep_degree: int = 1) -> int:
+    """Static buffer depth per expert — the paper's max_tokens (Eq. 2)."""
+    per = n_tokens * cfg.num_experts_per_tok / max(cfg.num_experts, 1)
+    cap = int(per * cfg.capacity_factor) + 1
+    return max(8, ((cap + 7) // 8) * 8)  # 8-aligned for TPU sublanes
+
+
+def dispatch_indices(top_i: jax.Array, num_experts: int, capacity: int):
+    """Compute scatter locations for capacity-bounded dispatch.
+
+    top_i: (T, K). Returns (expert_slot (T,K), valid (T,K)) where expert_slot
+    is the position within the expert's capacity buffer.
+    """
+    t, k = top_i.shape
+    flat_e = top_i.reshape(-1)                                     # (T*K,)
+    # Stable ordering: tokens keep arrival order within an expert, matching
+    # the paper's deterministic pre-allocated buffer offsets.
+    onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)  # (TK, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                      # running count
+    slot = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    valid = slot < capacity
+    return slot.reshape(t, k), valid.reshape(t, k)
+
+
+def moe_capacity(p: dict, x: jax.Array, cfg: ModelConfig,
+                 capacity: int | None = None
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Capacity-bounded gather→expert→scatter (single-device FusedDispatch)."""
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    cap = capacity or capacity_for(cfg, t)
+    top_i, top_p, aux = route(p["router"], x, cfg)
+    slot, valid = dispatch_indices(top_i, e, cap)
+
+    # Scatter tokens into the (E, C, D) buffer ("FusedDispatch").
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    flat_e, flat_s = top_i.reshape(-1), slot.reshape(-1)
+    flat_v = valid.reshape(-1)
+    tok_ids = jnp.repeat(jnp.arange(t), k)
+    safe_s = jnp.where(flat_v, flat_s, cap - 1)  # clamp; invalid contributions zeroed
+    contrib = jnp.where(flat_v[:, None], x[tok_ids], 0)
+    buf = buf.at[flat_e, safe_s].add(contrib)
+
+    # Expert FFN over the static buffer.
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, p["w_down"])
+
+    # Gather back + weighted combine ("FusedCombine").
+    gathered = y[flat_e, safe_s]                                  # (T*K, D)
+    gathered = jnp.where(flat_v[:, None], gathered, 0)
+    weighted = gathered.astype(jnp.float32) * top_p.reshape(-1)[:, None]
+    out = jnp.zeros((t, d), jnp.float32).at[tok_ids].add(weighted).astype(x.dtype)
+
+    dropped = jnp.sum(~flat_v)
+    return out + _shared_out(p, x), {"aux_loss": aux, "dropped": dropped}

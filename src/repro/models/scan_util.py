@@ -1,0 +1,26 @@
+"""Scan/map helpers shared by the model stack.
+
+REPRO_SCAN_UNROLL=full (set by the dry-run) unrolls layer scans and chunk
+maps so XLA cost_analysis attributes FLOPs to every iteration; the default
+(1) keeps rolled loops for fast compiles everywhere else."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_unroll():
+    v = os.environ.get("REPRO_SCAN_UNROLL", "1")
+    return True if v == "full" else int(v)
+
+
+def chunk_map(fn, n_chunks: int):
+    """Map fn over chunk indices 0..n-1, stacking results on axis 0.
+
+    Always rolled: unrolling 64 attention chunks × 61 layers makes XLA CPU
+    compiles intractable. The dry-run instead adds an analytic correction
+    for the (1 - 1/n_chunks) of attention FLOPs the rolled loop hides from
+    cost_analysis (launch/dryrun.py _chunk_flops_correction)."""
+    return jax.lax.map(fn, jnp.arange(n_chunks, dtype=jnp.int32))

@@ -1,0 +1,13 @@
+from repro.quant.int8 import (  # noqa: F401
+    QuantizedLinear,
+    adaptive_scale_search,
+    block_clip_search,
+    calibrate_linear,
+    equalization_scales,
+    error_compensation,
+    quantize_act_per_token,
+    quantize_param_tree,
+    quantize_weight_per_channel,
+    quantized_matmul,
+    should_quantize,
+)

@@ -1,0 +1,223 @@
+"""Training-free hierarchical INT8 quantization (paper §4.5).
+
+All five components of the paper's scheme:
+
+1. **Mixed-precision strategy** — a policy classifies tensors: large matmuls
+   (FFN / attention projections / experts) go INT8; norms, routers, scales
+   and other numerically-sensitive small tensors stay BF16/FP32.
+2. **Adaptive scale search** (Eq. 3) — offline grid search for the
+   weight/activation scale split s* minimizing ‖Q(W·s)(s⁻¹X) − WX‖.
+3. **Outlier suppression via structural transformation** — SmoothQuant-style
+   diagonal equalization absorbed into adjacent layers (the paper's "simple
+   linear transformations ... absorbing scaling factors").
+4. **Mixed-granularity kernels** — per-token activation scales × per-channel
+   weight scales, executed by kernels/int8_gemm on the MXU.
+5. **Block-level clipping + error compensation** (Eq. 4) — per-block clip
+   factor search plus an additive bias correcting the systematic
+   quantization error, estimated on calibration data.
+
+Everything is calibration-time only; inference uses the produced
+:class:`QuantizedLinear` tensors with zero runtime search overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedLinear(NamedTuple):
+    """Per-channel INT8 weight + scales (+ optional equalization & bias)."""
+    w_q: jax.Array          # (K, N) int8
+    w_scale: jax.Array      # (1, N) f32
+    eq: Optional[jax.Array]          # (K,) f32 activation equalization or None
+    bias_corr: Optional[jax.Array]   # (N,) f32 error compensation or None
+
+
+# ---------------------------------------------------------------------------
+# Granular quantizers (component 4)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight_per_channel(w: jax.Array, clip: Optional[jax.Array] = None
+                                ) -> Tuple[jax.Array, jax.Array]:
+    """w: (K, N) -> (int8 (K,N), scale (1,N)). Per-output-channel, static."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=0, keepdims=True)
+    if clip is not None:
+        absmax = absmax * clip
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_act_per_token(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (T, K) -> (int8, scale (T,1)). Per-token, dynamic."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# ---------------------------------------------------------------------------
+# Adaptive scale search (component 2, paper Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+def adaptive_scale_search(w: jax.Array, x_calib: jax.Array,
+                          grid=(0.5, 0.7, 0.85, 1.0, 1.2, 1.5, 2.0)
+                          ) -> Tuple[float, jax.Array]:
+    """Find scalar s* minimizing ‖Q(W·s)(s⁻¹X) − WX‖_F (offline)."""
+    ref = x_calib.astype(jnp.float32) @ w.astype(jnp.float32)
+
+    def err(s):
+        wq, ws = quantize_weight_per_channel(w * s)
+        xq, xs = quantize_act_per_token(x_calib / s)
+        approx = (xq.astype(jnp.int32) @ wq.astype(jnp.int32)).astype(jnp.float32)
+        approx = approx * xs * ws
+        return jnp.linalg.norm(approx - ref)
+
+    errs = jnp.stack([err(s) for s in grid])
+    best = int(jnp.argmin(errs))
+    return float(grid[best]), errs
+
+
+# ---------------------------------------------------------------------------
+# Outlier suppression (component 3)
+# ---------------------------------------------------------------------------
+
+
+def equalization_scales(w: jax.Array, x_calib: jax.Array,
+                        alpha: float = 0.5) -> jax.Array:
+    """Diagonal equalization s_k = max|X_k|^α / max|W_k|^(1-α), absorbed as
+    x' = x / s, w' = w * s[:, None] — function-preserving, flattens the
+    activation outlier channels into the (statically-quantized) weights."""
+    xmax = jnp.maximum(jnp.max(jnp.abs(x_calib.astype(jnp.float32)), axis=0), 1e-5)
+    wmax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1), 1e-5)
+    return (xmax ** alpha) / (wmax ** (1 - alpha))
+
+
+# ---------------------------------------------------------------------------
+# Block-level clipping + error compensation (component 5, Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def block_clip_search(w: jax.Array, x_calib: jax.Array, n_blocks: int = 4,
+                      grid=(0.8, 0.9, 0.95, 1.0)) -> jax.Array:
+    """Per-block clip factor α minimizing the block's output error (Eq. 4).
+    Blocks partition output channels. Returns (1, N) clip multipliers."""
+    k, n = w.shape
+    bs = max(1, n // n_blocks)
+    clips = []
+    xf = x_calib.astype(jnp.float32)
+    for b0 in range(0, n, bs):
+        wb = w[:, b0:b0 + bs]
+        ref = xf @ wb.astype(jnp.float32)
+        errs = []
+        for a in grid:
+            wq, ws = quantize_weight_per_channel(wb, clip=jnp.float32(a))
+            xq, xs = quantize_act_per_token(x_calib)
+            approx = (xq.astype(jnp.int32) @ wq.astype(jnp.int32)
+                      ).astype(jnp.float32) * xs * ws
+            errs.append(jnp.linalg.norm(approx - ref))
+        best = grid[int(jnp.argmin(jnp.stack(errs)))]
+        clips.append(jnp.full((1, wb.shape[1]), best, jnp.float32))
+    return jnp.concatenate(clips, axis=1)
+
+
+def error_compensation(w: jax.Array, ql: "QuantizedLinear",
+                       x_calib: jax.Array) -> jax.Array:
+    """Additive bias E[WX − Q(W)Q(X)] over calibration tokens (N,).
+
+    ``w`` / ``x_calib`` are the *original* (un-equalized) tensors; the
+    quantized path applies ql.eq internally, so both sides see identical
+    inputs.
+    """
+    ref = x_calib.astype(jnp.float32) @ w.astype(jnp.float32)
+    approx = quantized_matmul(x_calib, ql._replace(bias_corr=None))
+    return jnp.mean(ref - approx.astype(jnp.float32), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Calibration driver + runtime apply
+# ---------------------------------------------------------------------------
+
+
+def calibrate_linear(w: jax.Array, x_calib: jax.Array, *,
+                     equalize: bool = True, block_clip: bool = True,
+                     compensate: bool = True) -> QuantizedLinear:
+    """Full §4.5 pipeline for one weight matrix (offline)."""
+    eq = equalization_scales(w, x_calib) if equalize else None
+    w_eff = w * eq[:, None] if eq is not None else w
+    x_eff = x_calib / eq[None, :] if eq is not None else x_calib
+    clip = block_clip_search(w_eff, x_eff) if block_clip else None
+    w_q, w_scale = quantize_weight_per_channel(w_eff, clip=clip)
+    ql = QuantizedLinear(w_q, w_scale, eq, None)
+    if compensate:
+        bias = error_compensation(w, ql, x_calib)
+        ql = ql._replace(bias_corr=bias)
+    return ql
+
+
+def quantized_matmul(x: jax.Array, ql: QuantizedLinear,
+                     use_kernel: bool = False,
+                     out_dtype=jnp.float32) -> jax.Array:
+    """Runtime: per-token quantize -> INT8 GEMM -> rescale (+bias)."""
+    if ql.eq is not None:
+        x = x / ql.eq[None, :].astype(x.dtype)
+    x_q, x_scale = quantize_act_per_token(x)
+    if use_kernel:
+        from repro.kernels.int8_gemm.ops import int8_matmul
+        out = int8_matmul(x_q, ql.w_q, x_scale, ql.w_scale,
+                          out_dtype=jnp.float32)
+    else:
+        out = (x_q.astype(jnp.int32) @ ql.w_q.astype(jnp.int32)
+               ).astype(jnp.float32) * x_scale * ql.w_scale
+    if ql.bias_corr is not None:
+        out = out + ql.bias_corr[None, :]
+    return out.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision policy (component 1)
+# ---------------------------------------------------------------------------
+
+#: path-substring rules: tensors matching INT8_PATHS are quantized; others
+#: (norms, routers, biases, scales, dt/A/D of SSM blocks) stay high precision.
+INT8_PATHS = ("w_gate", "w_up", "w_down", "wq", "wk", "wv", "wo",
+              "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",
+              "shared_gate", "shared_up", "shared_down",
+              "in_proj", "out_proj", "lm_head", "mix", "proj")
+KEEP_PATHS = ("ln", "norm", "router", "bias", "dt_bias", "A_log", "D",
+              "conv", "embed", "q_norm", "k_norm", "q_ln", "kv_ln")
+
+
+def should_quantize(path: str) -> bool:
+    leaf = path.split("/")[-1]
+    if any(k in leaf for k in KEEP_PATHS):
+        return False
+    return any(k == leaf or leaf.startswith(k) for k in INT8_PATHS)
+
+
+def quantize_param_tree(params: dict) -> Tuple[dict, Dict[str, int]]:
+    """Apply the mixed-precision policy over a model param tree.
+    2-D+ tensors on INT8 paths -> (int8, scale) dicts; rest untouched.
+    Returns (new tree, {quantized: n, kept: m})."""
+    stats = {"quantized": 0, "kept": 0}
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+        if hasattr(tree, "ndim") and tree.ndim >= 2 and should_quantize(path):
+            mat = tree.reshape(-1, tree.shape[-1])
+            q, s = quantize_weight_per_channel(mat)
+            stats["quantized"] += 1
+            return {"__q__": q.reshape(tree.shape),
+                    "__scale__": s.astype(jnp.float32)}
+        stats["kept"] += 1
+        return tree
+
+    return walk(params), stats

@@ -1,0 +1,13 @@
+from repro.serving.engine import (  # noqa: F401
+    DecodeEngine,
+    PrefillEngine,
+    Request,
+    RequestResult,
+    ServingSystem,
+)
+from repro.serving.transfer import (  # noqa: F401
+    KVTransferEngine,
+    connection_map,
+    prefill_source_rank,
+    transfer_balance,
+)

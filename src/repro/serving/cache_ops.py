@@ -1,0 +1,123 @@
+"""Structure-aware batch-axis ops over model cache pytrees.
+
+Caches built by models.model.make_caches have family-specific layouts
+(layer-stacked KV, MLA latent, SSM state, hybrid group caches); these helpers
+slice/insert per-request rows for continuous batching and serialize per-token
+blocks for the EMS context cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import KVCache
+from repro.models.mamba2 import SSMState
+from repro.models.model import build_plan, make_caches
+
+
+def cache_batch_axes(cfg: ModelConfig, caches: Dict[str, Any]) -> Dict[str, Any]:
+    """Pytree of batch-axis indices matching the cache structure
+    (None = unbatched leaf, e.g. length scalars)."""
+    axes: Dict[str, Any] = {}
+    for seg in build_plan(cfg):
+        c = caches[seg.name]
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                axes[seg.name] = {"mla": 1, "length": None}
+            else:
+                axes[seg.name] = KVCache(1, 1, None)
+        elif seg.kind == "mamba_tail":
+            axes[seg.name] = SSMState(1, 1, None)
+        else:
+            axes[seg.name] = {
+                "ssm": {"h": 2, "conv": 2, "length": None},
+                "length": None,
+                "shared_kv": KVCache(1, 1, None),
+            }
+    return axes
+
+
+def _map2(fn, tree, axes):
+    return jax.tree.map(fn, tree, axes)
+
+
+def slice_request(cfg: ModelConfig, caches, row: int):
+    """Extract one request's cache (batch dim kept = 1)."""
+    axes = cache_batch_axes(cfg, caches)
+    return _map2(
+        lambda leaf, ax: leaf if ax is None else
+        jax.lax.dynamic_slice_in_dim(leaf, row, 1, axis=ax),
+        caches, axes)
+
+
+def insert_request(cfg: ModelConfig, caches, req_cache, row: int):
+    """Write one request's cache (batch=1) into batch slot ``row``."""
+    axes = cache_batch_axes(cfg, caches)
+    return jax.tree.map(
+        lambda dst, src, ax: dst if ax is None else
+        jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), row, axis=ax),
+        caches, req_cache, axes)
+
+
+def seq_slice(cfg: ModelConfig, caches, start: int, length: int):
+    """Slice ``length`` tokens of sequence state (KV/MLA buffers only) —
+    the payload unit of context caching. SSM states are not sliceable by
+    token (noted inapplicability, DESIGN.md §3)."""
+    out = {}
+    for seg in build_plan(cfg):
+        c = caches[seg.name]
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                out[seg.name] = jax.lax.dynamic_slice_in_dim(
+                    c["mla"], start, length, axis=2)
+            else:
+                out[seg.name] = (
+                    jax.lax.dynamic_slice_in_dim(c.k, start, length, axis=2),
+                    jax.lax.dynamic_slice_in_dim(c.v, start, length, axis=2))
+    return out
+
+
+def seq_insert(cfg: ModelConfig, caches, payload: Dict[str, Any], start: int):
+    """Insert a seq_slice payload back at token offset ``start``."""
+    new = dict(caches)
+    for seg in build_plan(cfg):
+        if seg.name not in payload:
+            continue
+        c = caches[seg.name]
+        pl = payload[seg.name]
+        if cfg.attention_kind == "mla":
+            new[seg.name] = {**c, "mla": jax.lax.dynamic_update_slice_in_dim(
+                c["mla"], pl.astype(c["mla"].dtype), start, axis=2)}
+        else:
+            k, v = pl
+            new[seg.name] = KVCache(
+                jax.lax.dynamic_update_slice_in_dim(c.k, k.astype(c.k.dtype), start, axis=2),
+                jax.lax.dynamic_update_slice_in_dim(c.v, v.astype(c.v.dtype), start, axis=2),
+                c.length)
+    return new
+
+
+def pack_payload(payload: Dict[str, Any]) -> np.ndarray:
+    """Flatten a seq_slice payload to one contiguous byte buffer (the unit
+    stored in the EMS pool)."""
+    leaves = [np.asarray(x, np.float32).ravel() for x in jax.tree.leaves(payload)]
+    return np.concatenate(leaves) if leaves else np.zeros(0, np.float32)
+
+
+def payload_like(cfg: ModelConfig, batch: int, length: int, template) -> Dict[str, Any]:
+    return seq_slice(cfg, template, 0, length)
+
+
+def unpack_payload(flat: np.ndarray, template: Dict[str, Any]) -> Dict[str, Any]:
+    leaves, treedef = jax.tree.flatten(template)
+    out, off = [], 0
+    for leaf in leaves:
+        n = leaf.size
+        out.append(jnp.asarray(flat[off:off + n], jnp.float32).reshape(leaf.shape))
+        off += n
+    return jax.tree.unflatten(treedef, out)

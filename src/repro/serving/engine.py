@@ -1,0 +1,280 @@
+"""PDC peer-to-peer serving engines (paper §4.1).
+
+Three independently scalable pools, communicating only via explicit KV
+interfaces:
+
+* :class:`PrefillEngine`  — prompt processing + EMS context-cache reuse/store
+  (reused prefixes skip computation; suffixes run with position offsets).
+* :class:`DecodeEngine`   — continuous-batched autoregressive decode over
+  fixed slots with **per-request cache lengths** (vector cache_len), optional
+  MTP speculative decoding and microbatch interleaving.
+* :class:`ServingSystem`  — the peer-to-peer glue: a *stateless* scheduler
+  routes prefills to the least-loaded instance (no cache-locality constraint
+  — the paper's central contrast with KVCache-centric designs), hands KV off
+  over the RDMA-plane transfer engine, and inserts requests into any free
+  decode slot.
+
+Everything runs functionally on CPU with smoke configs; on TPU the same
+step functions are pjit-ed over the production mesh (launch/serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import mtp as mtp_mod
+from repro.mempool.context_cache import ContextCache
+from repro.models import model as model_mod
+from repro.serving import cache_ops
+from repro.serving.transfer import KVTransferEngine
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: List[int]
+    reused_tokens: int = 0
+    computed_tokens: int = 0
+    prefill_instance: int = -1
+    transfer_seconds: float = 0.0
+    decode_iters: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+class PrefillEngine:
+    def __init__(self, params, cfg: ModelConfig, capacity: int,
+                 context_cache: Optional[ContextCache] = None,
+                 instance_id: int = 0, moe_fn=None):
+        self.params, self.cfg, self.capacity = params, cfg, capacity
+        self.cc = context_cache
+        self.instance_id = instance_id
+        self.load = 0  # in-flight prompt tokens (scheduler signal)
+        self._prefill = jax.jit(
+            lambda p, b: model_mod.prefill(p, cfg, b, capacity, moe_fn,
+                                           cache_dtype=jnp.float32))
+        self._step = jax.jit(
+            lambda p, t, c, l: model_mod.decode_step(p, cfg, t, c, l, moe_fn))
+
+    def _fresh_cache(self):
+        return model_mod.make_caches(self.cfg, 1, self.capacity, jnp.float32)
+
+    def run(self, req: Request) -> Tuple[int, Any, RequestResult]:
+        """Process one prompt. Returns (first_token, caches(B=1), result)."""
+        cfg = self.cfg
+        prompt = list(req.prompt)
+        res = RequestResult(req.rid, [], prefill_instance=self.instance_id)
+        self.load += len(prompt)
+        try:
+            reuse_len = 0
+            caches = None
+            if self.cc is not None and cfg.attention_kind != "none" \
+                    and not cfg.is_hybrid:
+                reuse_len, keys = self.cc.match_prefix(prompt)
+                reuse_len = min(reuse_len, len(prompt) - 1)
+                reuse_len -= reuse_len % self.cc.block
+                keys = keys[: reuse_len // self.cc.block]
+                if reuse_len > 0:
+                    caches = self._fresh_cache()
+                    tmpl = cache_ops.seq_slice(cfg, caches, 0, self.cc.block)
+                    for bi, key in enumerate(keys):
+                        flat = self.cc.pool.get(key)
+                        payload = cache_ops.unpack_payload(flat, tmpl)
+                        caches = cache_ops.seq_insert(cfg, caches, payload,
+                                                      bi * self.cc.block)
+            if reuse_len > 0:
+                # Suffix-only computation: teacher-forced continuation from
+                # the reused prefix (positions offset by reuse_len).
+                logits = None
+                cl = jnp.int32(reuse_len)
+                for tok in prompt[reuse_len:]:
+                    t = jnp.full((1, 1), tok, jnp.int32)
+                    logits, caches = self._step(self.params, t, caches, cl)
+                    cl = cl + 1
+                first = int(jnp.argmax(logits[0]))
+                res.computed_tokens = len(prompt) - reuse_len
+            else:
+                batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+                logits, caches = self._prefill(self.params, batch)
+                first = int(jnp.argmax(logits[0, len(prompt) - 1]))
+                res.computed_tokens = len(prompt)
+            res.reused_tokens = reuse_len
+
+            # Store newly computed full blocks back to EMS (async IRL).
+            if self.cc is not None and cfg.attention_kind != "none" \
+                    and not cfg.is_hybrid:
+                n_blocks = len(prompt) // self.cc.block
+                payloads = []
+                for bi in range(n_blocks):
+                    sl = cache_ops.seq_slice(cfg, caches, bi * self.cc.block,
+                                             self.cc.block)
+                    payloads.append(cache_ops.pack_payload(sl))
+                if payloads:
+                    self.cc.store(prompt[: n_blocks * self.cc.block], payloads)
+            return first, caches, res
+        finally:
+            self.load -= len(prompt)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    remaining: int
+    result: RequestResult
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig, max_batch: int, capacity: int,
+                 moe_fn=None, use_mtp: bool = False, mtp_params=None, seed=0):
+        self.params, self.cfg = params, cfg
+        self.b, self.capacity = max_batch, capacity
+        self.use_mtp = use_mtp
+        self.mtp_params = mtp_params
+        self.caches = model_mod.make_caches(cfg, max_batch, capacity, jnp.float32)
+        self.cache_len = jnp.zeros((max_batch,), jnp.int32)
+        self.cur_tok = jnp.zeros((max_batch,), jnp.int32)
+        self.draft_tok = jnp.zeros((max_batch,), jnp.int32)
+        self.slots: List[Optional[_Slot]] = [None] * max_batch
+        self.key = jax.random.PRNGKey(seed)
+        self.iters = 0
+        self._step = jax.jit(
+            lambda p, t, c, l: model_mod.decode_step(p, cfg, t, c, l, moe_fn))
+        if use_mtp:
+            self._mtp_step = jax.jit(
+                lambda p, mp, x, d, c, l, k: mtp_mod.mtp_step(
+                    p, mp, cfg, x, d, c, l, k, moe_fn))
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def add(self, slot: int, req_cache, first_token: int, prompt_len: int,
+            result: RequestResult, max_new: int) -> None:
+        self.caches = cache_ops.insert_request(self.cfg, self.caches,
+                                               req_cache, slot)
+        self.cache_len = self.cache_len.at[slot].set(prompt_len)
+        self.cur_tok = self.cur_tok.at[slot].set(first_token)
+        result.tokens.append(first_token)
+        self.slots[slot] = _Slot(result.rid, max_new - 1, result)
+        if self.use_mtp:
+            d = mtp_mod.propose_draft(self.params, self.mtp_params, self.cfg,
+                                      self.cur_tok[slot: slot + 1])
+            self.draft_tok = self.draft_tok.at[slot].set(int(d[0]))
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def step(self) -> List[RequestResult]:
+        """One batched decode iteration. Returns requests finished this step."""
+        self.iters += 1
+        self.key, sub = jax.random.split(self.key)
+        if self.use_mtp:
+            emitted, accepted, x_next, d_next, self.caches, self.cache_len = \
+                self._mtp_step(self.params, self.mtp_params, self.cur_tok,
+                               self.draft_tok, self.caches, self.cache_len, sub)
+            self.cur_tok, self.draft_tok = x_next, d_next
+            em = np.asarray(emitted)
+            acc = np.asarray(accepted)
+        else:
+            logits, self.caches = self._step(self.params, self.cur_tok[:, None],
+                                             self.caches, self.cache_len)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.cache_len = self.cache_len + 1
+            self.cur_tok = nxt
+            em = np.asarray(nxt)[:, None]
+            acc = np.zeros(self.b, bool)
+
+        finished = []
+        for i, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            slot.result.decode_iters += 1
+            new_toks = [int(em[i, 0])]
+            if self.use_mtp and acc[i] and slot.remaining > 1:
+                new_toks.append(int(em[i, 1]))
+            for t in new_toks:
+                if slot.remaining > 0:
+                    slot.result.tokens.append(t)
+                    slot.remaining -= 1
+            if slot.remaining <= 0:
+                finished.append(slot.result)
+                self.slots[i] = None
+        return finished
+
+
+# ---------------------------------------------------------------------------
+# Peer-to-peer serving system (PDC glue)
+# ---------------------------------------------------------------------------
+
+
+class ServingSystem:
+    def __init__(self, params, cfg: ModelConfig, *, n_prefill: int = 2,
+                 decode_batch: int = 4, capacity: int = 128,
+                 context_cache: Optional[ContextCache] = None,
+                 use_mtp: bool = False, mtp_params=None, moe_fn=None):
+        self.cfg = cfg
+        self.cc = context_cache
+        self.prefills = [PrefillEngine(params, cfg, capacity, context_cache,
+                                       i, moe_fn) for i in range(n_prefill)]
+        self.decode = DecodeEngine(params, cfg, decode_batch, capacity,
+                                   moe_fn, use_mtp, mtp_params)
+        self.transfer = KVTransferEngine()
+
+    def _route(self) -> PrefillEngine:
+        """Stateless scheduling: least-loaded instance, NO locality term —
+        any NPU can reach any cached block uniformly over UB (paper §4.1)."""
+        return min(self.prefills, key=lambda e: e.load)
+
+    def serve(self, requests: List[Request]) -> List[RequestResult]:
+        pending = list(requests)
+        results: List[RequestResult] = []
+        waiting: List[Tuple[int, Any, int, RequestResult, int]] = []
+        while pending or waiting or self.decode.active:
+            # prefill (async wrt decode; modeled sequentially on 1 CPU)
+            while pending:
+                req = pending.pop(0)
+                eng = self._route()
+                first, caches, res = eng.run(req)
+                res.transfer_seconds = self.transfer.transfer(caches)
+                waiting.append((first, caches, len(req.prompt), res,
+                                req.max_new_tokens))
+            # admit into free decode slots
+            admitted = []
+            for item in waiting:
+                slot = self.decode.free_slot()
+                if slot is None:
+                    break
+                first, caches, plen, res, mnt = item
+                req_cache = caches  # prefill ran with batch=1
+                self.decode.add(slot, req_cache, first, plen, res, mnt)
+                admitted.append(item)
+            for item in admitted:
+                waiting.remove(item)
+            # decode step
+            if self.decode.active:
+                results.extend(self.decode.step())
+        return results

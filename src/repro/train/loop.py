@@ -1,0 +1,53 @@
+"""Training loop: jitted train_step with optional remat + microbatching."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.microbatch import microbatched_loss
+from repro.models import model as model_mod
+from repro.train.optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, moe_fn=None,
+                    remat: bool = False, n_micro: int = 1) -> Callable:
+    loss_fn = lambda p, b: model_mod.lm_loss(p, cfg, b, moe_fn)
+    if remat:
+        loss_fn = jax.checkpoint(loss_fn)
+    loss_fn = microbatched_loss(loss_fn, n_micro)
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def train(params, cfg: ModelConfig, batches: Iterator[Dict], steps: int,
+          opt_cfg: Optional[OptConfig] = None, moe_fn=None,
+          log_every: int = 10, jit: bool = True, n_micro: int = 1):
+    """Simple driver used by examples/ and tests. Returns (params, history)."""
+    opt_cfg = opt_cfg or OptConfig(total_steps=steps, warmup_steps=max(1, steps // 10))
+    step_fn = make_train_step(cfg, opt_cfg, moe_fn, n_micro=n_micro)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    opt_state = init_opt_state(params)
+    history = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = i
+            history.append(rec)
+            print(f"step {i:5d} loss={rec['loss']:.4f} nll={rec.get('nll', 0):.4f} "
+                  f"lr={rec['lr']:.2e} gnorm={rec['grad_norm']:.2f}", flush=True)
+    return params, history

@@ -1,0 +1,73 @@
+"""AdamW + cosine schedule with linear warmup (pure JAX, no optax offline)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def lr_at(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    warm = cfg.lr * (step + 1) / cfg.warmup_steps
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos).astype(jnp.float32)
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = lambda p: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return OptState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any, state: OptState
+                 ) -> Tuple[Any, OptState, dict]:
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    step = state.step + 1
+    lr = lr_at(cfg, state.step)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g,
+                      state.nu, grads)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        # decoupled weight decay on matrices only
+        if p.ndim >= 2:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, OptState(step, mu, nu), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,44 @@
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+# single real CPU device. Multi-device tests (tests/test_multidevice.py) run
+# in a subprocess with --xla_force_host_platform_device_count set.
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, smoke_variant  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)
+
+
+def make_batch(cfg, b=2, s=16, seed=0):
+    """Batch dict appropriate for the config's modality."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    batch = {}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = jax.random.normal(k1, (b, s, cfg.d_model), jnp.float32)
+        batch["labels"] = jax.random.randint(k2, (b, s), 0, cfg.vocab_size)
+        return batch
+    if cfg.frontend == "vision_patches":
+        p = cfg.num_prefix_embeddings
+        assert s > p, "sequence must exceed patch count"
+        batch["prefix_emb"] = jax.random.normal(k1, (b, p, cfg.d_model), jnp.float32)
+        batch["tokens"] = jax.random.randint(k2, (b, s - p), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(k2, (b, s - p), 0, cfg.vocab_size)
+        return batch
+    batch["tokens"] = jax.random.randint(k1, (b, s), 0, cfg.vocab_size)
+    batch["labels"] = jax.random.randint(k2, (b, s), 0, cfg.vocab_size)
+    return batch
+
+
+def smoke(name):
+    return smoke_variant(get_config(name))

@@ -1,0 +1,61 @@
+"""Block-skipped flash prefill (beyond-paper §Perf optimization) must match
+the masked full-S chunked baseline exactly."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.models import attention as A
+from repro.models import forward, init_params
+
+
+@pytest.fixture(autouse=True)
+def _restore_env():
+    yield
+    os.environ["REPRO_BLOCK_SKIP"] = "0"
+
+
+@pytest.mark.parametrize("window", [None, 16, 24])
+def test_flash_matches_baseline(window):
+    cfg = dataclasses.replace(smoke("qwen3-8b"), sliding_window=window)
+    p1 = A.init_attention_params(jax.random.PRNGKey(0), cfg, 1, jnp.float32)
+    p = jax.tree.map(lambda a: a[0], p1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    os.environ["REPRO_BLOCK_SKIP"] = "0"
+    ref, (k1, v1) = A.attention_prefill(p, x, cfg)
+    os.environ["REPRO_BLOCK_SKIP"] = "1"
+    out, (k2, v2) = A.attention_prefill(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+
+
+def test_mla_flash_matches_baseline():
+    from repro.models import mla as M
+    cfg = smoke("deepseek-r1")
+    p1 = M.init_mla_params(jax.random.PRNGKey(2), cfg, 1, jnp.float32)
+    p = jax.tree.map(lambda a: a[0], p1)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 64, cfg.d_model))
+    os.environ["REPRO_BLOCK_SKIP"] = "0"
+    ref, lat_ref = M.mla_prefill(p, x, cfg)
+    os.environ["REPRO_BLOCK_SKIP"] = "1"
+    out, lat = M.mla_prefill(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(lat), np.asarray(lat_ref))
+
+
+def test_flash_full_model_forward():
+    cfg = smoke("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    os.environ["REPRO_BLOCK_SKIP"] = "0"
+    ref, _ = forward(params, cfg, {"tokens": toks})
+    os.environ["REPRO_BLOCK_SKIP"] = "1"
+    out, _ = forward(params, cfg, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)

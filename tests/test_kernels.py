@@ -1,0 +1,95 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles (kernels run in interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dispatch_quant.ops import dispatch_quantize
+from repro.kernels.dispatch_quant.ref import dispatch_quantize_ref
+from repro.kernels.int8_gemm.ops import int8_matmul
+from repro.kernels.int8_gemm.ref import int8_matmul_ref
+from repro.kernels.mla_attention.ops import mla_decode_attention
+from repro.kernels.mla_attention.ref import mla_decode_attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@pytest.mark.parametrize("t,d", [(8, 64), (64, 256), (128, 128), (32, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dispatch_quant_sweep(t, d, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(t + d), (t, d)) * 5).astype(dtype)
+    q, s = dispatch_quantize(x)
+    qr, sr = dispatch_quantize_ref(x)
+    # XLA may fold x/s into x*(1/s): allow the resulting ±1 code at exact
+    # rounding boundaries (value-identical to within half a scale step).
+    assert (np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32)) <= 1).all()
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # quantization error bound: |x - q*s| <= s/2 per element
+    deq = np.asarray(q, np.float32) * np.asarray(s)
+    err = np.abs(deq - np.asarray(x, np.float32))
+    assert (err <= np.asarray(s) * 0.5 + 1e-6).all()
+
+
+@pytest.mark.parametrize("m,k,n", [(32, 64, 48), (128, 128, 128),
+                                   (64, 256, 96), (16, 32, 128)])
+@pytest.mark.parametrize("out_dtype", [jnp.bfloat16, jnp.float32])
+def test_int8_gemm_sweep(m, k, n, out_dtype):
+    kk = jax.random.PRNGKey(m * k + n)
+    ks = jax.random.split(kk, 4)
+    xq = jax.random.randint(ks[0], (m, k), -127, 128, jnp.int8)
+    wq = jax.random.randint(ks[1], (k, n), -127, 128, jnp.int8)
+    xs = jax.random.uniform(ks[2], (m, 1)) * 0.1
+    ws = jax.random.uniform(ks[3], (1, n)) * 0.1
+    out = int8_matmul(xq, wq, xs, ws, out_dtype=out_dtype)
+    ref = int8_matmul_ref(xq, wq, xs, ws, out_dtype=out_dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=1e-2)
+
+
+@pytest.mark.parametrize("b,h,r,dr,s", [(1, 4, 32, 16, 64), (2, 8, 64, 16, 256),
+                                        (2, 16, 128, 64, 128)])
+@pytest.mark.parametrize("valid_len", [1, 37, None])
+def test_mla_attention_sweep(b, h, r, dr, s, valid_len):
+    ks = jax.random.split(jax.random.PRNGKey(b * s + h), 3)
+    ql = jax.random.normal(ks[0], (b, h, r))
+    qr = jax.random.normal(ks[1], (b, h, dr))
+    cache = jax.random.normal(ks[2], (b, s, r + dr))
+    vl = s if valid_len is None else min(valid_len, s)
+    valid = jnp.arange(s) < vl
+    out = mla_decode_attention(ql, qr, cache, valid, 0.125, r)
+    ref = mla_decode_attention_ref(ql, qr, cache, valid, 0.125, r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 16), (2, 128, 4, 32, 16, 32), (1, 96, 2, 64, 128, 32),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.random.uniform(ks[1], (b, s, h), minval=0.001, maxval=0.1)
+    alog = jax.random.normal(ks[2], (h,)) * 0.1
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+    y, hf = ssd_scan(x, dt, alog, bm, cm, chunk=chunk)
+    yr, hr = ssd_scan_ref(x, dt, alog, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hr), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_matches_model_chunked():
+    """The Pallas kernel and the model's pure-jnp chunked SSD agree."""
+    from repro.models.mamba2 import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, s, h, p, n = 2, 64, 4, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.random.uniform(ks[1], (b, s, h), minval=0.001, maxval=0.1)
+    alog = jax.random.normal(ks[2], (h,)) * 0.1
+    bm = jax.random.normal(ks[3], (b, s, n))
+    cm = jax.random.normal(ks[4], (b, s, n))
+    y1, h1 = ssd_scan(x, dt, alog, bm, cm, chunk=16)
+    y2, h2 = ssd_chunked(x, dt, alog, bm, cm, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,66 @@
+"""Disaggregated memory pool + model caching (paper §4.4, Table 2)."""
+import numpy as np
+import pytest
+
+from repro.mempool import (MemoryPool, ModelCache, OBS_STORE, UB_PLANE,
+                           VPC_PLANE)
+
+
+def test_namespace_quota():
+    pool = MemoryPool(n_nodes=2)
+    pool.controller.create_namespace("small", quota_bytes=1000)
+    assert pool.put("a", np.zeros(100, np.float32), "small")   # 400 B
+    assert pool.put("b", np.zeros(100, np.float32), "small")   # 800 B
+    assert not pool.put("c", np.zeros(100, np.float32), "small")  # over quota
+
+
+def test_namespace_isolation_delete():
+    pool = MemoryPool(n_nodes=2)
+    pool.put("x1", np.ones(8, np.float32), "ns_a")
+    pool.put("x2", np.ones(8, np.float32), "ns_b")
+    for s in pool.servers:
+        s.delete_namespace("ns_a")
+    assert pool.get("x1") is None
+    assert pool.get("x2") is not None
+
+
+def test_plane_cost_model_ub_faster_than_vpc():
+    nbytes = 1 << 30
+    assert UB_PLANE.cost(nbytes) < VPC_PLANE.cost(nbytes) / 5
+
+
+def test_model_cache_table2_semantics():
+    """EMS vs no-cache loading reproduces Table 2's qualitative structure:
+    cold EMS ≈ one OBS fetch (~320s for 671GB at 2.5GB/s shared once +
+    fast UB fan-out); warm switch is ~100x faster than cold."""
+    total = 671 * 10**9
+    # --- no cache: 8 instances each pull from OBS (8x contention) ---
+    pool1 = MemoryPool(n_nodes=32)
+    mc1 = ModelCache(pool1)
+    meta1 = mc1.register("dsr1", "v1", total)
+    t_nocache = mc1.load_to_npu(meta1, n_instances=8)  # never cached => OBS each
+    # approximately 8 * 671GB / 2.5GB/s, minus pool-assisted reuse
+    # --- EMS: one shared OBS fill + UB loads ---
+    pool2 = MemoryPool(n_nodes=32, dram_per_node=1 << 38)
+    mc2 = ModelCache(pool2)
+    meta2 = mc2.register("dsr1", "v1", total)
+    t_fill = mc2.prefetch(meta2)
+    t_warm = mc2.load_to_npu(meta2, n_instances=8)
+    assert 200 < t_fill < 400, f"cold OBS fill {t_fill}s (paper: ~320s)"
+    per_instance_warm = t_warm / 8
+    assert per_instance_warm < 10, f"warm load {per_instance_warm}s (paper: ~5s)"
+    assert t_fill + t_warm < t_nocache / 3
+
+    # --- model switch: warm hit ~5s ---
+    t_switch, warm = mc2.switch_model(meta2)
+    assert warm and t_switch < 10
+
+
+def test_model_cache_versioning():
+    pool = MemoryPool(n_nodes=4, dram_per_node=1 << 34)
+    mc = ModelCache(pool)
+    v1 = mc.register("m", "v1", 10 ** 9)
+    v2 = mc.register("m", "v2", 10 ** 9)
+    mc.prefetch(v1)
+    assert mc.is_cached(v1)
+    assert not mc.is_cached(v2)  # versions are distinct block sets

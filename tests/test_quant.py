@@ -1,0 +1,84 @@
+"""INT8 quantization subsystem (paper §4.5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.quant import (adaptive_scale_search, calibrate_linear,
+                         quantize_param_tree, quantized_matmul,
+                         should_quantize)
+
+
+@pytest.fixture(scope="module")
+def calib_data():
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (128, 96)) * 0.05
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 128))
+    x = x.at[:, 5].mul(30.0)  # activation outlier channel
+    return w, x
+
+
+def _rel_err(w, x, **kwargs):
+    ref = x @ w
+    ql = calibrate_linear(w, x, **kwargs)
+    out = quantized_matmul(x, ql)
+    return float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+
+
+def test_equalization_suppresses_outliers(calib_data):
+    w, x = calib_data
+    plain = _rel_err(w, x, equalize=False, block_clip=False, compensate=False)
+    eq = _rel_err(w, x, equalize=True, block_clip=False, compensate=False)
+    assert eq < plain * 0.6, f"equalization should cut error: {plain} -> {eq}"
+
+
+def test_full_pipeline_monotone(calib_data):
+    w, x = calib_data
+    plain = _rel_err(w, x, equalize=False, block_clip=False, compensate=False)
+    full = _rel_err(w, x, equalize=True, block_clip=True, compensate=True)
+    assert full <= plain
+    assert full < 0.02  # accuracy-preserving (paper Table 6 spirit)
+
+
+def test_adaptive_scale_search_improves_or_matches(calib_data):
+    w, x = calib_data
+    s, errs = adaptive_scale_search(w, x)
+    assert float(jnp.min(errs)) <= float(errs[3]) + 1e-6  # grid[3] == 1.0
+
+
+def test_kernel_path_matches_jnp_path(calib_data):
+    w, x = calib_data
+    ql = calibrate_linear(w, x, equalize=True, block_clip=False,
+                          compensate=False)
+    out_j = quantized_matmul(x, ql, use_kernel=False)
+    out_k = quantized_matmul(x, ql, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out_j), np.asarray(out_k),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mixed_precision_policy():
+    assert should_quantize("segments/moe/moe/w_gate")
+    assert should_quantize("segments/dense/attn/wq")
+    assert should_quantize("segments/moe/attn/wkv_a")
+    assert not should_quantize("segments/dense/attn/ln")
+    assert not should_quantize("segments/moe/moe/router")
+    assert not should_quantize("segments/mamba/mamba/A_log")
+    assert not should_quantize("segments/mamba/mamba/conv_w")
+    assert not should_quantize("embed")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "olmoe-1b-7b", "mamba2-780m",
+                                  "deepseek-r1"])
+def test_quantize_param_tree_coverage(arch):
+    from repro.models import init_params
+    cfg = smoke(arch)
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    qp, stats = quantize_param_tree(p)
+    assert stats["quantized"] > 0
+    assert stats["kept"] > 0
+    # quantized leaves carry scales
+    flat = jax.tree_util.tree_flatten_with_path(qp)[0]
+    q_leaves = [p for p, _ in flat if any(
+        getattr(k, "key", "") == "__q__" for k in p)]
+    assert len(q_leaves) == stats["quantized"]

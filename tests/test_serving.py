@@ -1,0 +1,143 @@
+"""Serving-system behaviour: PDC flow, cache reuse exactness, MTP greedy
+equivalence, continuous batching."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.core import init_mtp_params
+from repro.core.mtp import mtp_step, propose_draft
+from repro.mempool import ContextCache, MemoryPool
+from repro.models import decode_step, init_params, prefill
+from repro.serving import Request, ServingSystem
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = smoke("qwen3-8b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def greedy_reference(cfg, params, prompt, n_new):
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    logits, caches = prefill(params, cfg, batch, capacity=len(prompt) + n_new + 4,
+                             cache_dtype=jnp.float32)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    cl = jnp.int32(len(prompt))
+    for _ in range(n_new - 1):
+        lg, caches = decode_step(params, cfg,
+                                 jnp.asarray([[toks[-1]]], jnp.int32), caches, cl)
+        toks.append(int(jnp.argmax(lg[0])))
+        cl = cl + 1
+    return toks
+
+
+def test_serving_matches_direct_greedy(qwen):
+    cfg, params = qwen
+    rng = np.random.RandomState(1)
+    prompts = [list(rng.randint(0, 200, 20)) for _ in range(3)]
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=48)
+    results = system.serve([Request(i, p, 5) for i, p in enumerate(prompts)])
+    for r in results:
+        ref = greedy_reference(cfg, params, prompts[r.rid], 5)
+        assert r.tokens == ref, f"rid {r.rid}: {r.tokens} != {ref}"
+
+
+def test_cache_reuse_is_exact(qwen):
+    """Outputs with context-cache reuse == outputs without (bit-level)."""
+    cfg, params = qwen
+    rng = np.random.RandomState(2)
+    shared = list(rng.randint(0, 200, 16))
+    prompts = [shared + list(rng.randint(0, 200, 8)) for _ in range(3)]
+
+    pool = MemoryPool(n_nodes=4)
+    cc = ContextCache(pool, block_tokens=8, model_tag=cfg.name)
+    sys_cached = ServingSystem(params, cfg, n_prefill=1, decode_batch=3,
+                               capacity=48, context_cache=cc)
+    res_c = sys_cached.serve([Request(i, p, 4) for i, p in enumerate(prompts)])
+    assert any(r.reused_tokens > 0 for r in res_c), "no reuse happened"
+
+    sys_plain = ServingSystem(params, cfg, n_prefill=1, decode_batch=3,
+                              capacity=48)
+    res_p = sys_plain.serve([Request(i, p, 4) for i, p in enumerate(prompts)])
+    for rc, rp in zip(sorted(res_c, key=lambda r: r.rid),
+                      sorted(res_p, key=lambda r: r.rid)):
+        assert rc.tokens == rp.tokens
+
+
+def test_mtp_greedy_equals_plain_greedy(qwen):
+    """Speculative decoding must not change greedy outputs — the fundamental
+    correctness property of MTP (§4.2.4)."""
+    cfg, params = qwen
+    mtp = init_mtp_params(jax.random.PRNGKey(7), cfg)
+    rng = np.random.RandomState(3)
+    prompt = list(rng.randint(0, 200, 20))
+    n_new = 9
+    ref = greedy_reference(cfg, params, prompt, n_new)
+
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    logits, caches = prefill(params, cfg, batch, capacity=64,
+                             cache_dtype=jnp.float32)
+    x = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    d = propose_draft(params, mtp, cfg, x)
+    cl = jnp.full((1,), len(prompt), jnp.int32)
+    got = [int(x[0])]
+    key = jax.random.PRNGKey(0)
+    accepts = 0
+    while len(got) < n_new:
+        key, sub = jax.random.split(key)
+        em, acc, x, d, caches, cl = mtp_step(params, mtp, cfg, x, d, caches,
+                                             cl, sub, greedy=True)
+        got.append(int(em[0, 0]))
+        if bool(acc[0]) and len(got) < n_new:
+            got.append(int(em[0, 1]))
+            accepts += 1
+    assert got[:n_new] == ref, f"MTP diverged: {got[:n_new]} != {ref}"
+
+
+def test_mtp_mixed_acceptance_batch(qwen):
+    """Batched MTP with diverging per-request lengths still matches
+    per-request greedy references (the §4.2.2-(3) misaligned-batch case)."""
+    cfg, params = qwen
+    mtp = init_mtp_params(jax.random.PRNGKey(8), cfg)
+    rng = np.random.RandomState(4)
+    prompts = [list(rng.randint(0, 200, 16)) for _ in range(3)]
+    n_new = 7
+    refs = [greedy_reference(cfg, params, p, n_new) for p in prompts]
+
+    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+    logits, caches = prefill(params, cfg, batch, capacity=48,
+                             cache_dtype=jnp.float32)
+    x = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    d = propose_draft(params, mtp, cfg, x)
+    cl = jnp.full((3,), 16, jnp.int32)
+    got = [[int(x[i])] for i in range(3)]
+    key = jax.random.PRNGKey(1)
+    for _ in range(n_new):
+        key, sub = jax.random.split(key)
+        em, acc, x, d, caches, cl = mtp_step(params, mtp, cfg, x, d, caches,
+                                             cl, sub, greedy=True)
+        for i in range(3):
+            if len(got[i]) < n_new:
+                got[i].append(int(em[i, 0]))
+                if bool(acc[i]) and len(got[i]) < n_new:
+                    got[i].append(int(em[i, 1]))
+    for i in range(3):
+        assert got[i][:n_new] == refs[i], f"req {i}: {got[i][:n_new]} != {refs[i]}"
+
+
+def test_continuous_batching_more_requests_than_slots(qwen):
+    cfg, params = qwen
+    rng = np.random.RandomState(5)
+    prompts = [list(rng.randint(0, 200, 12)) for _ in range(5)]
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=32)
+    results = system.serve([Request(i, p, 4) for i, p in enumerate(prompts)])
+    assert len(results) == 5
+    for r in results:
+        assert len(r.tokens) == 4
+        ref = greedy_reference(cfg, params, prompts[r.rid], 4)
+        assert r.tokens == ref
