@@ -59,3 +59,50 @@ def step_time_from_record(rec: Dict, overlap_collectives: bool = False) -> float
 
 def emit(name: str, metric: str, value, derived: str = "") -> None:
     print(f"{name},{metric},{value},{derived}")
+
+
+# ---------------------------------------------------------------------------
+# Live-scheduler smoke harness (shared by bench_tpot_slo and
+# bench_decode_throughput so their request streams stay comparable).
+# ---------------------------------------------------------------------------
+
+LIVE_ARCH = "granite-3-2b"
+LIVE_REQUESTS = 10
+LIVE_PROMPT_LEN = 12
+LIVE_MAX_NEW = 4
+
+_live_model = None
+_live_systems: Dict[int, object] = {}
+
+
+def live_smoke_serve(*, decode_batch: int, tpot_budget_ms=None,
+                     admission: str = "shed"):
+    """Serve the canonical smoke request stream; returns (results,
+    scheduler). The ServingSystem (and its jitted prefill/decode steps) is
+    cached per decode_batch — only the scheduler, which traces no
+    computation, is rebuilt per sweep point."""
+    global _live_model
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, smoke_variant
+    from repro.models import init_params
+    from repro.serving import Request, SchedulerConfig, ServingSystem
+
+    if _live_model is None:
+        cfg = smoke_variant(get_config(LIVE_ARCH))
+        _live_model = (cfg, init_params(jax.random.PRNGKey(0), cfg))
+    cfg, params = _live_model
+    rng = np.random.RandomState(0)
+    reqs = [Request(i, list(rng.randint(0, cfg.vocab_size, LIVE_PROMPT_LEN)),
+                    LIVE_MAX_NEW) for i in range(LIVE_REQUESTS)]
+    system = _live_systems.get(decode_batch)
+    if system is None:
+        system = ServingSystem(params, cfg, n_prefill=2,
+                               decode_batch=decode_batch,
+                               capacity=LIVE_PROMPT_LEN + LIVE_MAX_NEW + 16)
+        _live_systems[decode_batch] = system
+    system.reconfigure_scheduler(
+        SchedulerConfig(tpot_budget_ms=tpot_budget_ms, admission=admission))
+    results = system.serve(reqs)
+    return results, system.scheduler

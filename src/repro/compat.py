@@ -1,0 +1,119 @@
+"""Version-compat shims over the jax API surface the repo depends on.
+
+The repo targets the modern jax API (``jax.shard_map`` with ``check_vma``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``) but must
+also run on jax 0.4.x where those names live under ``jax.experimental`` or do
+not exist yet. Every version-sensitive import goes through this module so the
+rest of ``src/`` stays on one idiom.
+
+Exports
+-------
+``shard_map``   — new-style signature (accepts ``check_vma``; translated to
+                  the legacy ``check_rep`` kwarg when running on old jax).
+``AxisType``    — ``jax.sharding.AxisType`` or a stand-in enum on old jax
+                  (old jax meshes are implicitly Auto, so the value is only
+                  ever consumed by :func:`make_mesh`, which drops it there).
+``make_mesh``   — ``jax.make_mesh`` that tolerates the ``axis_types`` kwarg
+                  on versions whose signature predates it.
+``TPUCompilerParams`` — ``pallas.tpu.CompilerParams`` (modern name) or the
+                  legacy ``pallas.tpu.TPUCompilerParams``.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Any
+
+import jax
+
+# --------------------------------------------------------------------------
+# shard_map: jax>=0.6 exposes jax.shard_map(check_vma=...); 0.4.x has
+# jax.experimental.shard_map.shard_map(check_rep=...).
+# --------------------------------------------------------------------------
+
+try:
+    from jax import shard_map as _shard_map          # modern jax
+except ImportError:                                  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """``jax.shard_map`` with the modern keyword surface on any jax version.
+
+    ``check_vma`` (new name) and ``check_rep`` (legacy name) are accepted
+    interchangeably and translated to whatever the underlying jax expects;
+    kwargs the installed version does not know are dropped rather than
+    raising, so call sites can stay on the modern idiom.
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    if "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    kwargs = {k: v for k, v in kwargs.items() if k in _SHARD_MAP_PARAMS}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+# --------------------------------------------------------------------------
+# AxisType / make_mesh: jax.sharding.AxisType + the axis_types kwarg landed
+# after 0.4.37. Old meshes are implicitly Auto, so dropping the kwarg there
+# preserves semantics for every use in this repo (which only ever passes
+# AxisType.Auto).
+# --------------------------------------------------------------------------
+
+try:
+    from jax.sharding import AxisType                # modern jax
+except ImportError:                                  # pragma: no cover - version dependent
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_jax_make_mesh = getattr(jax, "make_mesh", None)
+_MAKE_MESH_PARAMS = (frozenset(inspect.signature(_jax_make_mesh).parameters)
+                     if _jax_make_mesh is not None else frozenset())
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types: Any = None, **kwargs):
+    """``jax.make_mesh`` accepting ``axis_types`` on every jax version."""
+    if _jax_make_mesh is None:      # pre-0.4.35: build the Mesh directly
+        import math
+
+        import numpy as np
+        from jax.sharding import Mesh
+
+        n = math.prod(axis_shapes)
+        devices = np.asarray(jax.devices()[:n]).reshape(axis_shapes)
+        return Mesh(devices, axis_names)
+    if axis_types is not None and "axis_types" in _MAKE_MESH_PARAMS:
+        kwargs["axis_types"] = axis_types
+    return _jax_make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# Pallas TPU compiler params: renamed TPUCompilerParams -> CompilerParams.
+# Call sites in kernels/ only pass ``dimension_semantics``, which both names
+# accept. Guarded so compat consumers that never touch Pallas (mesh, LEP)
+# stay importable on jax builds without pallas.tpu; the kernel packages
+# import pallas themselves and fail on their own terms there.
+# --------------------------------------------------------------------------
+
+try:
+    from jax.experimental.pallas import tpu as _pltpu
+
+    TPUCompilerParams = getattr(_pltpu, "CompilerParams", None) \
+        or _pltpu.TPUCompilerParams
+except ImportError:                                  # pragma: no cover - version dependent
+    TPUCompilerParams = None
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a flat dict on every jax version
+    (0.4.x returned a one-element list of per-computation dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost

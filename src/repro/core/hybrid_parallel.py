@@ -31,8 +31,9 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models.attention import NEG_INF, _pick_chunk

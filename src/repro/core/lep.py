@@ -39,7 +39,8 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models import moe as moe_mod

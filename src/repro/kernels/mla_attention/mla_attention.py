@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -94,7 +96,7 @@ def mla_decode_attention_pallas(q_lat, q_rope, cache, valid, scale: float,
             pltpu.VMEM((h, 1), jnp.float32),   # running sum
             pltpu.VMEM((h, r), jnp.float32),   # accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q_lat, q_rope, cache, valid_i)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import TPUCompilerParams
+
 
 def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,       # inputs
             y_ref, hout_ref,                          # outputs
@@ -101,7 +103,7 @@ def ssd_scan_pallas(x, dt, a_log, bmat, cmat, chunk: int = 128,
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x.astype(jnp.float32), dt.astype(jnp.float32), a_log.astype(jnp.float32),

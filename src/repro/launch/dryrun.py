@@ -21,6 +21,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import cost_analysis
 from repro.configs import ASSIGNED_ARCHS, get_config, get_shape, INPUT_SHAPES
 from repro.configs.base import InputShape, ModelConfig
 from repro.core.lep import make_lep_moe_fn, pick_lep_plan
@@ -229,7 +230,7 @@ def _measure(cfg, shape, mesh):
     lowered = jax.jit(step, in_shardings=shardings).lower(*args)
     compiled = lowered.compile()
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     coll = hlo.collective_bytes(compiled.as_text())
     struct = (getattr(mem, "temp_size_in_bytes", 0)
               + getattr(mem, "argument_size_in_bytes", 0)

@@ -1,11 +1,14 @@
 """Serving launcher: the full PDC pipeline on a batch of synthetic requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-      --n-requests 6 --prompt-len 24 --max-new 8 [--mtp] [--no-cache]
+      --n-requests 6 --prompt-len 24 --max-new 8 [--mtp] [--no-cache] \
+      [--policy least_loaded|round_robin|queue_depth] \
+      [--tpot-budget-ms 15 --admission queue|shed] [--interleave] [--trace]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -16,6 +19,7 @@ from repro.core import init_mtp_params
 from repro.mempool import ContextCache, MemoryPool
 from repro.models import init_params
 from repro.serving import Request, ServingSystem
+from repro.serving.scheduler import ROUTERS
 
 
 def main() -> None:
@@ -29,6 +33,17 @@ def main() -> None:
     ap.add_argument("--mtp", action="store_true")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--decode-batch", type=int, default=4)
+    ap.add_argument("--policy", default="least_loaded",
+                    choices=sorted(ROUTERS),
+                    help="prefill routing policy")
+    ap.add_argument("--tpot-budget-ms", type=float, default=None,
+                    help="TPOT SLO budget for the admission gate (virtual ms)")
+    ap.add_argument("--admission", default="queue", choices=("queue", "shed"),
+                    help="hold or reject prefills that would break the SLO")
+    ap.add_argument("--interleave", action="store_true",
+                    help="pair two decode microbatches per step (§4.2.3)")
+    ap.add_argument("--trace", action="store_true",
+                    help="dump the structured per-request trace as JSON")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))
@@ -40,30 +55,41 @@ def main() -> None:
     mtp_params = init_mtp_params(jax.random.PRNGKey(1), cfg) if args.mtp else None
 
     rng = np.random.RandomState(0)
-    prefix = list(rng.randint(0, cfg.vocab_size, args.shared_prefix))
+    shared = min(args.shared_prefix, args.prompt_len - 1)
+    prefix = list(rng.randint(0, cfg.vocab_size, shared))
     reqs = [Request(i, prefix + list(rng.randint(0, cfg.vocab_size,
-                                                 args.prompt_len - args.shared_prefix)),
+                                                 args.prompt_len - shared)),
                     args.max_new) for i in range(args.n_requests)]
 
     system = ServingSystem(params, cfg, n_prefill=2,
                            decode_batch=args.decode_batch,
                            capacity=args.prompt_len + args.max_new + 8,
                            context_cache=cc, use_mtp=args.mtp,
-                           mtp_params=mtp_params)
+                           mtp_params=mtp_params, policy=args.policy,
+                           tpot_budget_ms=args.tpot_budget_ms,
+                           admission=args.admission,
+                           interleave=args.interleave)
     t0 = time.time()
     results = system.serve(reqs)
     dt = time.time() - t0
-    total_new = sum(len(r.tokens) for r in results)
+    total_new = sum(len(r.tokens) for r in results if not r.shed)
     for r in sorted(results, key=lambda r: r.rid):
+        flag = " SHED" if r.shed else ""
         print(f"rid={r.rid} prefill@{r.prefill_instance} reused={r.reused_tokens} "
               f"computed={r.computed_tokens} iters={r.decode_iters} "
-              f"tokens={r.tokens}")
+              f"tokens={r.tokens}{flag}")
     print(f"\n{len(results)} requests, {total_new} tokens in {dt:.2f}s wall "
           f"({total_new/dt:.1f} tok/s on CPU smoke config)")
+    summary = system.scheduler.summary()
+    print("SLO summary (virtual clock): "
+          + ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                      for k, v in summary.items()))
     if cc is not None:
         print("pool:", cc.pool.stats())
     print("transfer:", system.transfer.transfers, "handoffs,",
           f"{system.transfer.bytes_moved/2**20:.1f} MiB over RDMA plane")
+    if args.trace:
+        print(json.dumps(system.scheduler.trace_records(), indent=1))
 
 
 if __name__ == "__main__":

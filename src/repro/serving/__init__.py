@@ -5,6 +5,23 @@ from repro.serving.engine import (  # noqa: F401
     RequestResult,
     ServingSystem,
 )
+from repro.serving.scheduler import (  # noqa: F401
+    ROUTERS,
+    AdmissionGate,
+    DecodeCostModel,
+    DecodeSlotManager,
+    LeastLoadedRouter,
+    MicrobatchInterleaver,
+    PrefillRouter,
+    QueueDepthRouter,
+    RequestTrace,
+    RoundRobinRouter,
+    Scheduler,
+    SchedulerConfig,
+    SlotError,
+    SLOTracker,
+    make_router,
+)
 from repro.serving.transfer import (  # noqa: F401
     KVTransferEngine,
     connection_map,

@@ -6,13 +6,15 @@ interfaces:
 * :class:`PrefillEngine`  — prompt processing + EMS context-cache reuse/store
   (reused prefixes skip computation; suffixes run with position offsets).
 * :class:`DecodeEngine`   — continuous-batched autoregressive decode over
-  fixed slots with **per-request cache lengths** (vector cache_len), optional
-  MTP speculative decoding and microbatch interleaving.
-* :class:`ServingSystem`  — the peer-to-peer glue: a *stateless* scheduler
-  routes prefills to the least-loaded instance (no cache-locality constraint
-  — the paper's central contrast with KVCache-centric designs), hands KV off
-  over the RDMA-plane transfer engine, and inserts requests into any free
-  decode slot.
+  fixed slots whose allocation/eviction and per-request ``cache_len``
+  accounting live in :class:`~repro.serving.scheduler.DecodeSlotManager`;
+  optional MTP speculative decoding and two-stream microbatch interleaving
+  (:class:`~repro.serving.scheduler.MicrobatchInterleaver`).
+* :class:`ServingSystem`  — the peer-to-peer glue. Every scheduling
+  *decision* (prefill routing policy, SLO admission control, trace/clock
+  bookkeeping) is delegated to :class:`~repro.serving.scheduler.Scheduler`;
+  this class only moves tensors: run prefill, hand KV off over the
+  RDMA-plane transfer engine, insert into decode slots, step decode.
 
 Everything runs functionally on CPU with smoke configs; on TPU the same
 step functions are pjit-ed over the production mesh (launch/serve.py).
@@ -20,7 +22,8 @@ step functions are pjit-ed over the production mesh (launch/serve.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +34,12 @@ from repro.core import mtp as mtp_mod
 from repro.mempool.context_cache import ContextCache
 from repro.models import model as model_mod
 from repro.serving import cache_ops
+from repro.serving.scheduler import (
+    DecodeSlotManager,
+    MicrobatchInterleaver,
+    Scheduler,
+    SchedulerConfig,
+)
 from repro.serving.transfer import KVTransferEngine
 
 
@@ -51,6 +60,7 @@ class RequestResult:
     prefill_instance: int = -1
     transfer_seconds: float = 0.0
     decode_iters: int = 0
+    shed: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -139,14 +149,15 @@ class PrefillEngine:
 
 @dataclasses.dataclass
 class _Slot:
-    rid: int
+    """Engine-side per-request payload riding in the slot manager."""
     remaining: int
     result: RequestResult
 
 
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, max_batch: int, capacity: int,
-                 moe_fn=None, use_mtp: bool = False, mtp_params=None, seed=0):
+                 moe_fn=None, use_mtp: bool = False, mtp_params=None, seed=0,
+                 interleave: bool = False, n_micro: int = 2):
         self.params, self.cfg = params, cfg
         self.b, self.capacity = max_batch, capacity
         self.use_mtp = use_mtp
@@ -155,30 +166,52 @@ class DecodeEngine:
         self.cache_len = jnp.zeros((max_batch,), jnp.int32)
         self.cur_tok = jnp.zeros((max_batch,), jnp.int32)
         self.draft_tok = jnp.zeros((max_batch,), jnp.int32)
-        self.slots: List[Optional[_Slot]] = [None] * max_batch
+        self.slot_mgr = DecodeSlotManager(max_batch, capacity)
         self.key = jax.random.PRNGKey(seed)
         self.iters = 0
-        self._step = jax.jit(
-            lambda p, t, c, l: model_mod.decode_step(p, cfg, t, c, l, moe_fn))
+        interleaver = MicrobatchInterleaver(n_micro if interleave else 1)
+        # Hybrid caches nest SSM state with batch on axis 2, which the
+        # microbatch split heuristic (batch = axis 1 for rank>=3) mis-slices.
+        self.interleaved = (interleaver.applicable(max_batch)
+                            and not use_mtp and not cfg.is_hybrid)
+        if interleave and not self.interleaved:
+            if use_mtp:
+                reason = "MTP speculative decoding steps are not interleavable"
+            elif cfg.is_hybrid:
+                reason = ("hybrid-architecture caches are not microbatch-"
+                          "splittable (SSM state batch axis)")
+            elif n_micro < 2:
+                reason = f"n_micro={n_micro} means no pairing"
+            else:
+                reason = (f"max_batch={max_batch} is not divisible by "
+                          f"n_micro={n_micro}")
+            warnings.warn("decode microbatch interleaving requested but "
+                          f"disabled: {reason}", stacklevel=2)
+
+        def _step(p, t, c, l):
+            base = lambda tt, cc, ll: model_mod.decode_step(  # noqa: E731
+                p, cfg, tt, cc, ll, moe_fn)
+            fn = interleaver.wrap(base, max_batch) if self.interleaved else base
+            return fn(t, c, l)
+
+        self._step = jax.jit(_step)
         if use_mtp:
             self._mtp_step = jax.jit(
                 lambda p, mp, x, d, c, l, k: mtp_mod.mtp_step(
                     p, mp, cfg, x, d, c, l, k, moe_fn))
 
     def free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
+        return self.slot_mgr.free_slot()
 
     def add(self, slot: int, req_cache, first_token: int, prompt_len: int,
             result: RequestResult, max_new: int) -> None:
+        self.slot_mgr.allocate(result.rid, prompt_len,
+                               payload=_Slot(max_new - 1, result), slot=slot)
         self.caches = cache_ops.insert_request(self.cfg, self.caches,
                                                req_cache, slot)
         self.cache_len = self.cache_len.at[slot].set(prompt_len)
         self.cur_tok = self.cur_tok.at[slot].set(first_token)
         result.tokens.append(first_token)
-        self.slots[slot] = _Slot(result.rid, max_new - 1, result)
         if self.use_mtp:
             d = mtp_mod.propose_draft(self.params, self.mtp_params, self.cfg,
                                       self.cur_tok[slot: slot + 1])
@@ -186,7 +219,7 @@ class DecodeEngine:
 
     @property
     def active(self) -> int:
-        return sum(s is not None for s in self.slots)
+        return self.slot_mgr.active
 
     def step(self) -> List[RequestResult]:
         """One batched decode iteration. Returns requests finished this step."""
@@ -209,10 +242,12 @@ class DecodeEngine:
             acc = np.zeros(self.b, bool)
 
         finished = []
-        for i, slot in enumerate(self.slots):
-            if slot is None:
-                continue
+        for i, info in list(self.slot_mgr.active_slots()):
+            slot: _Slot = info.payload
             slot.result.decode_iters += 1
+            # Mirror the device-side cache growth (MTP appends the accepted
+            # draft token too) with capacity enforcement.
+            self.slot_mgr.advance(i, 2 if (self.use_mtp and acc[i]) else 1)
             new_toks = [int(em[i, 0])]
             if self.use_mtp and acc[i] and slot.remaining > 1:
                 new_toks.append(int(em[i, 1]))
@@ -222,7 +257,7 @@ class DecodeEngine:
                     slot.remaining -= 1
             if slot.remaining <= 0:
                 finished.append(slot.result)
-                self.slots[i] = None
+                self.slot_mgr.release(i)
         return finished
 
 
@@ -231,50 +266,142 @@ class DecodeEngine:
 # ---------------------------------------------------------------------------
 
 
+@dataclasses.dataclass
+class _PendingAdmission:
+    first: int
+    caches: Any
+    prompt_len: int
+    result: RequestResult
+    max_new: int
+
+
 class ServingSystem:
+    """Peer-to-peer PDC pipeline wired through the pluggable scheduler.
+
+    ``policy`` selects the prefill router by name (``least_loaded``,
+    ``round_robin``, ``queue_depth``); ``tpot_budget_ms`` + ``admission``
+    configure SLO admission control; ``interleave`` pairs two decode
+    microbatches per step. Pass a full :class:`SchedulerConfig` as
+    ``scheduler_config`` to override cost-model constants; explicitly
+    passed scheduling kwargs still win over the provided config.
+    """
+
     def __init__(self, params, cfg: ModelConfig, *, n_prefill: int = 2,
                  decode_batch: int = 4, capacity: int = 128,
                  context_cache: Optional[ContextCache] = None,
-                 use_mtp: bool = False, mtp_params=None, moe_fn=None):
+                 use_mtp: bool = False, mtp_params=None, moe_fn=None,
+                 policy: Optional[str] = None,
+                 tpot_budget_ms: Optional[float] = None,
+                 admission: Optional[str] = None,
+                 interleave: Optional[bool] = None,
+                 scheduler_config: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.cc = context_cache
+        overrides = {k: v for k, v in (
+            ("policy", policy), ("tpot_budget_ms", tpot_budget_ms),
+            ("admission", admission), ("interleave_microbatches", interleave),
+        ) if v is not None}
+        sched_cfg = dataclasses.replace(
+            scheduler_config or SchedulerConfig(), **overrides)
         self.prefills = [PrefillEngine(params, cfg, capacity, context_cache,
                                        i, moe_fn) for i in range(n_prefill)]
         self.decode = DecodeEngine(params, cfg, decode_batch, capacity,
-                                   moe_fn, use_mtp, mtp_params)
+                                   moe_fn, use_mtp, mtp_params,
+                                   interleave=sched_cfg.interleave_microbatches,
+                                   n_micro=sched_cfg.n_micro)
         self.transfer = KVTransferEngine()
+        self.scheduler = Scheduler(n_prefill, self.decode.slot_mgr, sched_cfg)
 
-    def _route(self) -> PrefillEngine:
-        """Stateless scheduling: least-loaded instance, NO locality term —
-        any NPU can reach any cached block uniformly over UB (paper §4.1)."""
-        return min(self.prefills, key=lambda e: e.load)
+    def reconfigure_scheduler(self, scheduler_config: SchedulerConfig) -> None:
+        """Swap policy/SLO configuration between serve() waves without
+        rebuilding (re-jitting) the engines. Control-plane only: decode
+        microbatch interleaving is baked into the jitted step at
+        construction, so a config that flips it is rejected."""
+        cur = self.scheduler.config
+        new = scheduler_config
+        if (new.interleave_microbatches != cur.interleave_microbatches
+                or (new.interleave_microbatches
+                    and new.n_micro != cur.n_micro)):
+            raise ValueError(
+                "interleave_microbatches/n_micro are baked into the jitted "
+                "decode step at ServingSystem construction; build a new "
+                "system to change them")
+        self.scheduler = Scheduler(len(self.prefills), self.decode.slot_mgr,
+                                   scheduler_config)
 
     def serve(self, requests: List[Request]) -> List[RequestResult]:
-        pending = list(requests)
+        sched = self.scheduler
+        sched.begin_epoch()            # rids may repeat across serve() waves
+        pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         results: List[RequestResult] = []
-        waiting: List[Tuple[int, Any, int, RequestResult, int]] = []
+        waiting: List[_PendingAdmission] = []
+        # Worst-case decode cache growth: max_new - 1 iterations, +1 slack
+        # for an MTP accept on the final emitted token.
+        slack = 1 if self.decode.use_mtp else 0
         while pending or waiting or self.decode.active:
             # prefill (async wrt decode; modeled sequentially on 1 CPU)
             while pending:
                 req = pending.pop(0)
-                eng = self._route()
+                trace = sched.on_arrival(req.rid, req.arrival, len(req.prompt))
+                # max_new <= 1 never decodes, so only the prompt must fit
+                # (in the prefill cache, which shares `capacity`).
+                need = len(req.prompt) if req.max_new_tokens <= 1 \
+                    else len(req.prompt) + req.max_new_tokens - 1 + slack
+                if need > self.decode.capacity:
+                    # Reject up front: admitting would overflow the static KV
+                    # slot mid-decode and abort the whole batch.
+                    res = RequestResult(req.rid, [], shed=True)
+                    sched.on_shed(trace)
+                    sched.on_finish(trace, 0)
+                    results.append(res)
+                    continue
+                eng = self.prefills[sched.route_prefill(
+                    trace, [e.load for e in self.prefills])]
                 first, caches, res = eng.run(req)
+                sched.on_prefill_done(trace, eng.instance_id,
+                                      res.computed_tokens, res.reused_tokens)
+                if req.max_new_tokens <= 1:
+                    # Prefill already produced the only requested token:
+                    # no decode slot (a dead step could overflow a prompt-
+                    # filled KV slot) and no KV handoff to charge.
+                    if req.max_new_tokens == 1:
+                        res.tokens.append(first)
+                    sched.on_prefill_only_finish(trace)
+                    sched.on_finish(trace, len(res.tokens))
+                    results.append(res)
+                    continue
                 res.transfer_seconds = self.transfer.transfer(caches)
-                waiting.append((first, caches, len(req.prompt), res,
-                                req.max_new_tokens))
-            # admit into free decode slots
-            admitted = []
-            for item in waiting:
-                slot = self.decode.free_slot()
-                if slot is None:
+                sched.on_transfer(trace, res.transfer_seconds)
+                waiting.append(_PendingAdmission(first, caches,
+                                                 len(req.prompt), res,
+                                                 req.max_new_tokens))
+            # admit in FIFO order; the gate may queue or shed (SLO control)
+            still_waiting: List[_PendingAdmission] = []
+            for idx, item in enumerate(waiting):
+                trace = sched.traces[item.result.rid]
+                decision = sched.admission_decision(trace)
+                if decision == "admit":
+                    slot = self.decode.free_slot()
+                    self.decode.add(slot, item.caches, item.first,
+                                    item.prompt_len, item.result, item.max_new)
+                    sched.on_admit(trace, slot)
+                elif decision == "shed":
+                    item.result.shed = True
+                    item.result.tokens.append(item.first)
+                    sched.on_shed(trace)
+                    sched.on_finish(trace, len(item.result.tokens))
+                    results.append(item.result)
+                else:  # wait: keep FIFO order, stop admitting this round
+                    still_waiting.extend(waiting[idx:])
                     break
-                first, caches, plen, res, mnt = item
-                req_cache = caches  # prefill ran with batch=1
-                self.decode.add(slot, req_cache, first, plen, res, mnt)
-                admitted.append(item)
-            for item in admitted:
-                waiting.remove(item)
+            waiting = still_waiting
             # decode step
             if self.decode.active:
-                results.extend(self.decode.step())
+                active_rids = [info.rid for _, info
+                               in self.decode.slot_mgr.active_slots()]
+                finished = self.decode.step()
+                sched.on_decode_step(active_rids, [r.rid for r in finished])
+                for r in finished:
+                    sched.on_finish(sched.traces[r.rid], len(r.tokens))
+                results.extend(finished)
         return results

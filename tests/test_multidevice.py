@@ -25,8 +25,8 @@ def run_py(code: str, n_dev: int = 8, timeout: int = 520) -> str:
 def test_lep_all_modes_match_reference():
     out = run_py('''
 import dataclasses, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.launch.mesh import make_debug_mesh
+mesh = make_debug_mesh(2, 4)
 from repro.configs import get_config, smoke_variant
 from repro.core.lep import make_lep_moe_fn
 from repro.models import moe as moe_mod
@@ -54,8 +54,8 @@ print("LEP_OK")
 def test_lep_uneven_tokens_padding():
     out = run_py('''
 import dataclasses, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.launch.mesh import make_debug_mesh
+mesh = make_debug_mesh(2, 4)
 from repro.configs import get_config, smoke_variant
 from repro.core.lep import make_lep_moe_fn
 from repro.models import moe as moe_mod
@@ -78,8 +78,8 @@ print("PAD_OK")
 def test_hybrid_parallel_mla_prefill():
     out = run_py('''
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.launch.mesh import make_debug_mesh
+mesh = make_debug_mesh(2, 4)
 from repro.configs import get_config, smoke_variant
 from repro.models import mla as M
 from repro.core.hybrid_parallel import mla_prefill_hybrid
@@ -103,8 +103,8 @@ def test_hybrid_prefill_integrated_in_model():
     SP→TP→SP path; logits must match the plain path."""
     out = run_py('''
 import os, jax, jax.numpy as jnp
-from jax.sharding import AxisType
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.launch.mesh import make_debug_mesh
+mesh = make_debug_mesh(2, 4)
 from repro.configs import get_config, smoke_variant
 from repro.core.parallel import set_current_mesh
 from repro.models import init_params, prefill
@@ -127,8 +127,9 @@ def test_sharded_train_step_runs():
     """A real (executed, not just lowered) sharded train step on a 2x4 mesh."""
     out = run_py('''
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_debug_mesh
+mesh = make_debug_mesh(2, 4)
 from repro.configs import get_config, smoke_variant
 from repro.core.lep import make_lep_moe_fn
 from repro.models import init_params

@@ -1,0 +1,328 @@
+"""Property-style invariants for the SLO-aware PDC scheduler subsystem.
+
+Covers the pure control-plane pieces (routers, slot manager, admission gate,
+cost model) without jax, then the end-to-end SLO behaviour of the live
+ServingSystem on the virtual clock: no double slot assignment, cache_len
+bounded by capacity, router determinism on a fixed stream, and the admission
+gate never letting a recorded trace violate the configured TPOT budget.
+"""
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.models import init_params
+from repro.serving import Request, ServingSystem
+from repro.serving.scheduler import (
+    ROUTERS,
+    AdmissionGate,
+    DecodeCostModel,
+    DecodeSlotManager,
+    SlotError,
+    make_router,
+)
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def stream_requests(n, prompt_len=12, max_new=3, seed=1):
+    rng = np.random.RandomState(seed)
+    return [Request(i, list(rng.randint(0, 100, prompt_len)), max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# DecodeSlotManager invariants
+# ---------------------------------------------------------------------------
+
+
+def test_slots_never_double_assigned():
+    mgr = DecodeSlotManager(n_slots=4, capacity=16)
+    slots = [mgr.allocate(rid, cache_len=4) for rid in range(4)]
+    assert sorted(slots) == [0, 1, 2, 3]          # each slot used exactly once
+    assert mgr.free_slot() is None
+    with pytest.raises(SlotError):
+        mgr.allocate(99, cache_len=4)             # pool exhausted
+    with pytest.raises(SlotError):
+        mgr.allocate(99, cache_len=4, slot=2)     # explicit double assign
+    mgr.release(2)
+    assert mgr.allocate(99, cache_len=4) == 2     # lowest free index reused
+    mgr.release(3)
+    with pytest.raises(SlotError):
+        mgr.release(3)                            # double release
+
+
+def test_cache_len_never_exceeds_capacity():
+    mgr = DecodeSlotManager(n_slots=2, capacity=10)
+    s = mgr.allocate(0, cache_len=8)
+    assert mgr.advance(s, 2) == 10                # exactly at capacity: fine
+    with pytest.raises(SlotError):
+        mgr.advance(s, 1)                         # one past capacity: error
+    assert mgr.get(s).cache_len == 10             # failed advance is a no-op
+    with pytest.raises(SlotError):
+        mgr.allocate(1, cache_len=11)             # prompt alone too large
+    with pytest.raises(SlotError):
+        mgr.advance(1, 1)                         # advance on empty slot
+
+
+# ---------------------------------------------------------------------------
+# Routers: determinism + policy semantics
+# ---------------------------------------------------------------------------
+
+
+def test_router_registry_and_unknown_policy():
+    assert set(ROUTERS) == {"least_loaded", "round_robin", "queue_depth"}
+    with pytest.raises(ValueError, match="unknown prefill routing policy"):
+        make_router("cache_affinity", 2)
+
+
+@pytest.mark.parametrize("policy", sorted(ROUTERS))
+def test_router_deterministic_on_fixed_stream(policy):
+    loads_stream = [[0, 0, 0], [5, 0, 3], [5, 7, 3], [1, 1, 1], [9, 0, 0]]
+
+    def run():
+        r = make_router(policy, 3)
+        picks = []
+        for loads in loads_stream:
+            i = r.select(loads)
+            picks.append(i)
+            r.on_complete(i)
+        return picks
+
+    a, b = run(), run()
+    assert a == b, f"{policy} not deterministic: {a} vs {b}"
+    assert all(0 <= i < 3 for i in a)
+
+
+def test_round_robin_cycles():
+    r = make_router("round_robin", 3)
+    assert [r.select([0, 0, 0]) for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_least_loaded_picks_minimum_with_id_tiebreak():
+    r = make_router("least_loaded", 3)
+    assert r.select([5, 2, 9]) == 1
+    assert r.select([4, 4, 4]) == 0               # tie → lowest id
+
+
+def test_queue_depth_balances_outstanding_requests():
+    r = make_router("queue_depth", 2)
+    # loads are irrelevant to this policy; depth counts routed-not-finished
+    assert r.select([100, 0]) == 0
+    assert r.select([100, 0]) == 1
+    assert r.select([100, 0]) == 0
+    r.on_complete(1)                              # instance 1 drains
+    assert r.select([0, 0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Admission gate / cost model
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_batch_cap_math():
+    cm = DecodeCostModel(fixed_s=4e-3, per_req_s=1e-3)
+    assert cm.max_batch_for(15e-3) == 11
+    assert cm.max_batch_for(6e-3) == 2
+    assert cm.max_batch_for(5e-3) == 1
+    assert cm.max_batch_for(4e-3) == 0            # budget below fixed cost
+    assert cm.step_time(cm.max_batch_for(15e-3)) <= 15e-3
+    # budgets landing exactly on a step time admit B, not B-1 (float trunc)
+    for ms in (5, 6, 9, 11, 44, 45, 46, 47, 50):
+        b = cm.max_batch_for(ms * 1e-3)
+        assert b == ms - 4, (ms, b)
+        assert cm.step_time(b) <= ms * 1e-3 + 1e-12
+
+
+def test_gate_decisions_and_unsatisfiable_budget():
+    cm = DecodeCostModel(fixed_s=4e-3, per_req_s=1e-3)
+    gate = AdmissionGate(cm, tpot_budget_s=6e-3, mode="shed")
+    assert gate.max_batch == 2
+    assert gate.decide(active=0, has_free_slot=True) == "admit"
+    assert gate.decide(active=2, has_free_slot=True) == "shed"
+    assert gate.decide(active=2, has_free_slot=False) == "wait"
+    queue_gate = AdmissionGate(cm, tpot_budget_s=6e-3, mode="queue")
+    assert queue_gate.decide(active=2, has_free_slot=True) == "wait"
+    with pytest.raises(ValueError, match="no batch size can meet it"):
+        AdmissionGate(cm, tpot_budget_s=3e-3, mode="queue")
+    with pytest.raises(ValueError, match="queue|shed"):
+        AdmissionGate(cm, tpot_budget_s=6e-3, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# End-to-end SLO behaviour on the live system
+# ---------------------------------------------------------------------------
+
+
+def test_admission_gate_never_violates_budget_in_trace(granite):
+    cfg, params = granite
+    budget_ms = 6.0                               # cap=2 under default costs
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=4,
+                           capacity=32, tpot_budget_ms=budget_ms,
+                           admission="queue")
+    results = system.serve(stream_requests(6))
+    assert len(results) == 6 and not any(r.shed for r in results)
+    cap = system.scheduler.gate.max_batch
+    assert cap == 2
+    for tr in system.scheduler.tracker.finished:
+        assert tr.decode_iters > 0
+        assert tr.tpot <= budget_ms * 1e-3 + 1e-12, \
+            f"rid={tr.rid} tpot={tr.tpot*1e3:.3f}ms > budget {budget_ms}ms"
+
+
+def test_shed_mode_sheds_when_budget_tightens(granite):
+    cfg, params = granite
+
+    def run(budget_ms):
+        system = ServingSystem(params, cfg, n_prefill=2, decode_batch=4,
+                               capacity=32, tpot_budget_ms=budget_ms,
+                               admission="shed")
+        results = system.serve(stream_requests(6))
+        return results, system.scheduler.summary()
+
+    loose, s_loose = run(None)
+    tight, s_tight = run(6.0)
+    assert s_loose["shed"] == 0
+    assert s_tight["shed"] > 0                    # gate demonstrably sheds
+    assert s_tight["completed"] + s_tight["shed"] == 6
+    # shed requests still return their prefill-produced first token
+    for r in tight:
+        if r.shed:
+            assert len(r.tokens) == 1 and r.decode_iters == 0
+    # completed requests under the tight budget still meet it
+    assert s_tight["tpot_max_s"] <= 6.0e-3 + 1e-12
+
+
+def test_trace_records_are_complete_and_consistent(granite):
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=32, policy="round_robin")
+    results = system.serve(stream_requests(4, max_new=3))
+    recs = system.scheduler.trace_records()
+    assert [r["rid"] for r in recs] == [0, 1, 2, 3]
+    by_rid = {r.rid: r for r in results}
+    for rec in recs:
+        assert rec["prefill_instance"] in (0, 1)
+        assert rec["prefill_end"] >= rec["prefill_start"] >= rec["arrival"]
+        assert rec["transfer_seconds"] > 0        # RDMA plane was charged
+        assert rec["decode_end"] >= rec["decode_admit"] >= rec["prefill_end"]
+        assert rec["decode_iters"] == by_rid[rec["rid"]].decode_iters == 2
+        assert rec["tokens_out"] == 3
+        assert rec["ttft"] > 0 and rec["tpot"] > 0
+        assert rec["reused_tokens"] + rec["computed_tokens"] \
+            == rec["prompt_tokens"]
+
+
+@pytest.mark.parametrize("policy", ["least_loaded", "round_robin",
+                                    "queue_depth"])
+def test_routing_spreads_over_instances(granite, policy):
+    """With uniform requests every policy must use all prefill instances
+    (least_loaded/queue_depth balance on the virtual backlog timeline)."""
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=3, decode_batch=2,
+                           capacity=32, policy=policy)
+    results = system.serve(stream_requests(6))
+    used = {r.prefill_instance for r in results}
+    assert used == {0, 1, 2}, f"{policy} routed only to {used}"
+
+
+def test_policies_all_serve_correctly(granite):
+    cfg, params = granite
+    ref_tokens = None
+    for policy in sorted(ROUTERS):
+        system = ServingSystem(params, cfg, n_prefill=3, decode_batch=2,
+                               capacity=32, policy=policy)
+        results = system.serve(stream_requests(5))
+        toks = {r.rid: r.tokens for r in results}
+        assert len(toks) == 5
+        if ref_tokens is None:
+            ref_tokens = toks
+        else:          # routing must never change generated tokens
+            assert toks == ref_tokens, policy
+
+
+def test_oversized_request_rejected_without_killing_the_batch(granite):
+    """A request whose prompt + max_new exceeds KV capacity is rejected at
+    admission (shed=True, no tokens) instead of raising SlotError mid-decode
+    and discarding every other in-flight result."""
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=32)
+    reqs = stream_requests(3)
+    reqs.append(Request(3, list(np.random.RandomState(9).randint(0, 100, 30)),
+                        max_new_tokens=8))      # 30 + 7 > 32
+    results = system.serve(reqs)
+    assert len(results) == 4
+    rejected = {r.rid: r for r in results}[3]
+    assert rejected.shed and rejected.tokens == []
+    for r in results:
+        if r.rid != 3:
+            assert not r.shed and len(r.tokens) == 3
+
+
+def test_max_new_one_with_prompt_filling_slot(granite):
+    """max_new=1 is answered entirely by prefill: no decode slot, no dead
+    decode iteration — even when the prompt exactly fills KV capacity."""
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=16)
+    rng = np.random.RandomState(9)
+    reqs = [Request(0, list(rng.randint(0, 100, 16)), 1),   # prompt == cap
+            Request(1, list(rng.randint(0, 100, 8)), 4)]
+    results = {r.rid: r for r in system.serve(reqs)}
+    assert len(results[0].tokens) == 1 and results[0].decode_iters == 0
+    assert not results[0].shed
+    assert len(results[1].tokens) == 4
+    tr = system.scheduler.traces[0]
+    assert tr.decode_end == tr.decode_admit == tr.ready_at
+
+
+def test_max_new_zero_returns_no_tokens_and_oversized_prompt_rejected(granite):
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=16)
+    rng = np.random.RandomState(10)
+    reqs = [Request(0, list(rng.randint(0, 100, 10)), 0),    # fits, 0 tokens
+            Request(1, list(rng.randint(0, 100, 17)), 0),    # prompt > cap
+            Request(2, list(rng.randint(0, 100, 8)), 3)]
+    results = {r.rid: r for r in system.serve(reqs)}
+    assert results[0].tokens == [] and not results[0].shed
+    assert results[1].shed                       # rejected before prefill
+    assert len(results[2].tokens) == 3           # batch unaffected
+
+
+def test_serve_is_reinvokable_with_repeated_rids(granite):
+    """Each serve() call is a fresh scheduling epoch: rids may repeat
+    across waves and summary/trace reflect the latest wave only."""
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=32)
+    w1 = system.serve(stream_requests(3))
+    w2 = system.serve(stream_requests(3, seed=2))   # rids 0..2 again
+    assert len(w1) == len(w2) == 3
+    assert len(system.scheduler.trace_records()) == 3
+    assert system.scheduler.summary()["completed"] == 3
+
+
+def test_interleave_warns_when_not_applicable(granite):
+    cfg, params = granite
+    with pytest.warns(UserWarning, match="not divisible"):
+        ServingSystem(params, cfg, n_prefill=1, decode_batch=3,
+                      capacity=32, interleave=True)
+
+
+def test_interleaved_decode_matches_plain(granite):
+    cfg, params = granite
+    plain = ServingSystem(params, cfg, n_prefill=1, decode_batch=4,
+                          capacity=32)
+    inter = ServingSystem(params, cfg, n_prefill=1, decode_batch=4,
+                          capacity=32, interleave=True)
+    assert inter.decode.interleaved          # 4 % 2 == 0 → actually paired
+    r_plain = {r.rid: r.tokens for r in plain.serve(stream_requests(4))}
+    r_inter = {r.rid: r.tokens for r in inter.serve(stream_requests(4))}
+    assert r_plain == r_inter

@@ -68,6 +68,32 @@ def test_cache_reuse_is_exact(qwen):
         assert rc.tokens == rp.tokens
 
 
+def test_pdc_end_to_end_reuse_accounting(qwen):
+    """Full PDC run under prefix reuse: reused + computed tokens must account
+    for exactly the prompt, in both RequestResult and the scheduler trace."""
+    cfg, params = qwen
+    rng = np.random.RandomState(6)
+    shared = list(rng.randint(0, 200, 16))
+    prompts = [shared + list(rng.randint(0, 200, 8)) for _ in range(4)]
+    pool = MemoryPool(n_nodes=4)
+    cc = ContextCache(pool, block_tokens=8, model_tag=cfg.name)
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=48, context_cache=cc)
+    results = system.serve([Request(i, p, 4) for i, p in enumerate(prompts)])
+    assert len(results) == 4
+    assert any(r.reused_tokens > 0 for r in results), "no reuse happened"
+    for r in results:
+        assert r.reused_tokens + r.computed_tokens == len(prompts[r.rid])
+        assert len(r.tokens) == 4
+    for rec in system.scheduler.trace_records():
+        assert rec["reused_tokens"] + rec["computed_tokens"] \
+            == rec["prompt_tokens"]
+        # EMS reuse directly buys TTFT: only computed tokens cost prefill time
+        assert rec["prefill_end"] - rec["prefill_start"] == pytest.approx(
+            rec["computed_tokens"]
+            * system.scheduler.config.prefill_token_cost_s)
+
+
 def test_mtp_greedy_equals_plain_greedy(qwen):
     """Speculative decoding must not change greedy outputs — the fundamental
     correctness property of MTP (§4.2.4)."""

@@ -13,6 +13,24 @@ from repro.models import decode_step, init_params, prefill
 from repro.serving import Request, ServingSystem
 
 
+def test_hybrid_interleave_falls_back_with_warning():
+    """Hybrid caches nest SSM state with batch on axis 2, which microbatch
+    splitting would mis-slice — interleave must disable itself loudly and
+    serve correctly."""
+    cfg = smoke("zamba2-1.2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(3)
+    reqs = [Request(i, list(rng.randint(0, cfg.vocab_size, 12)), 3)
+            for i in range(2)]
+    with pytest.warns(UserWarning, match="hybrid"):
+        system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                               capacity=32, interleave=True)
+    assert not system.decode.interleaved
+    results = system.serve(reqs)
+    assert len(results) == 2
+    assert all(len(r.tokens) == 3 for r in results)
+
+
 @pytest.mark.parametrize("arch", ["mamba2-780m", "zamba2-1.2b"])
 def test_ssm_serving_matches_direct(arch):
     cfg = smoke(arch)

@@ -72,4 +72,4 @@ def test_scheduler_is_stateless_and_load_balanced():
     results = system.serve(reqs)
     used = {r.prefill_instance for r in results}
     assert len(results) == 6
-    assert len(used) >= 1  # all succeeded through the router
+    assert used == {0, 1, 2}  # virtual-backlog balancing spreads the load
