@@ -9,7 +9,7 @@
 PY ?= python
 PYTHONPATH := src
 
-.PHONY: test smoke serve-demo bench-slo ci
+.PHONY: test smoke serve-demo bench-slo bench-smoke ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -q
@@ -26,4 +26,10 @@ serve-demo:
 bench-slo:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.run --only tpot_slo
 
-ci: smoke test
+# Live-smoke perf rows only (no dry-run compiles); writes BENCH_decode.json
+# and BENCH_prefill.json at the repo root for PR-over-PR tracking.
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_prefill_throughput --smoke
+
+ci: smoke test bench-smoke

@@ -12,8 +12,10 @@ fixed per-step cost, so throughput rises with the decode batch while TPOT
 rises linearly (the Table 4 ↔ Table 5 tension, observed end-to-end)."""
 from __future__ import annotations
 
+import time
+
 from benchmarks.common import (PEAK_FLOPS, emit, ensure_dryrun,
-                               step_time_from_record)
+                               step_time_from_record, write_bench_artifact)
 
 ARCHS = ["qwen3-8b", "granite-3-2b", "olmoe-1b-7b", "kimi-k2-1t-a32b",
          "deepseek-r1"]
@@ -22,34 +24,48 @@ BATCH = 128
 MTP_ACCEPT = 0.70
 MTP_COST = 1.44      # paper Fig. 22b: ~44% per-iteration latency increase
 
+# device-resident fast-path comparison (wall clock, smoke config)
+FAST_CHUNK = 4
+FAST_MAX_NEW = 16
+FAST_REPEATS = 3
 
-def main() -> None:
+
+def main(smoke: bool = False) -> None:
     print("name,metric,value,derived")
-    for arch in ARCHS:
-        rec = ensure_dryrun(arch, SHAPE)
-        if rec is None:
-            emit("decode_tput", f"{arch}_tokens_per_s_per_chip", "NA",
-                 "dryrun_missing_or_skipped")
-            continue
-        tpot = step_time_from_record(rec)
-        tput = (BATCH / rec["n_devices"]) / tpot
-        emit("decode_tput", f"{arch}_TPOT_ms", round(tpot * 1e3, 2),
-             f"dom={rec['dominant']}")
-        emit("decode_tput", f"{arch}_tokens_per_s_per_chip", round(tput, 1),
-             f"batch_per_chip={BATCH/rec['n_devices']:.2f}")
-        tput_mtp = tput * (1 + MTP_ACCEPT) / MTP_COST
-        emit("decode_tput", f"{arch}_tokens_per_s_per_chip_mtp",
-             round(tput_mtp, 1), f"accept={MTP_ACCEPT}")
-        _optimized_row(arch, rec)
-    emit("decode_tput", "paper_deepseek_r1_per_NPU", 1943,
-         "CloudMatrix-Infer@TPOT<50ms (1.29 tok/s/TFLOPS)")
+    if not smoke:
+        for arch in ARCHS:
+            rec = ensure_dryrun(arch, SHAPE)
+            if rec is None:
+                emit("decode_tput", f"{arch}_tokens_per_s_per_chip", "NA",
+                     "dryrun_missing_or_skipped")
+                continue
+            tpot = step_time_from_record(rec)
+            tput = (BATCH / rec["n_devices"]) / tpot
+            emit("decode_tput", f"{arch}_TPOT_ms", round(tpot * 1e3, 2),
+                 f"dom={rec['dominant']}")
+            emit("decode_tput", f"{arch}_tokens_per_s_per_chip", round(tput, 1),
+                 f"batch_per_chip={BATCH/rec['n_devices']:.2f}")
+            tput_mtp = tput * (1 + MTP_ACCEPT) / MTP_COST
+            emit("decode_tput", f"{arch}_tokens_per_s_per_chip_mtp",
+                 round(tput_mtp, 1), f"accept={MTP_ACCEPT}")
+            _optimized_row(arch, rec)
+        emit("decode_tput", "paper_deepseek_r1_per_NPU", 1943,
+             "CloudMatrix-Infer@TPOT<50ms (1.29 tok/s/TFLOPS)")
     _live_rows()
 
 
 def _live_rows() -> None:
-    """Trace-derived decode throughput from the live scheduler subsystem."""
-    from benchmarks.common import live_smoke_serve
+    """Trace-derived decode throughput from the live scheduler subsystem,
+    plus the decode fast-path wall-clock comparison — persisted to
+    BENCH_decode.json so the perf trajectory is tracked PR-over-PR."""
+    from benchmarks.common import (LIVE_ARCH, LIVE_PROMPT_LEN, LIVE_REQUESTS,
+                                   live_smoke_serve)
 
+    artifact = {"config": {"arch": LIVE_ARCH, "requests": LIVE_REQUESTS,
+                           "prompt_len": LIVE_PROMPT_LEN,
+                           "max_new": FAST_MAX_NEW,
+                           "repeats": FAST_REPEATS},
+                "runs": []}
     for batch in (2, 8):
         results, scheduler = live_smoke_serve(decode_batch=batch)
         s = scheduler.summary()
@@ -58,6 +74,38 @@ def _live_rows() -> None:
         emit("decode_tput", f"live_smoke_b{batch}_tokens_per_virtual_s",
              round(tput, 1),
              f"tpot_p50_ms={s['tpot_p50_s']*1e3:.2f};n={len(results)}")
+
+    # --- device-resident fast path: decode_chunk=1 vs FAST_CHUNK ---------
+    walls = {}
+    for chunk in (1, FAST_CHUNK):
+        # warm (compile), then time repeated serve waves
+        live_smoke_serve(decode_batch=4, decode_chunk=chunk,
+                         max_new=FAST_MAX_NEW)
+        t0 = time.perf_counter()
+        for _ in range(FAST_REPEATS):
+            results, scheduler = live_smoke_serve(
+                decode_batch=4, decode_chunk=chunk, max_new=FAST_MAX_NEW)
+        wall = (time.perf_counter() - t0) / FAST_REPEATS
+        s = scheduler.summary()
+        decode_tokens = sum(len(r.tokens) - 1 for r in results if not r.shed)
+        walls[chunk] = wall
+        emit("decode_tput", f"fastpath_chunk{chunk}_tokens_per_wall_s",
+             round(decode_tokens / wall, 1), f"wall_s={wall:.3f}")
+        artifact["runs"].append({
+            "decode_chunk": chunk,
+            "decode_batch": 4,
+            "tokens_per_s": decode_tokens / wall,
+            "wall_s": wall,
+            "tpot_p50_ms": s["tpot_p50_s"] * 1e3,
+            "tpot_p99_ms": s["tpot_p99_s"] * 1e3,
+            "completed": s["completed"],
+        })
+    speedup = walls[1] / walls[FAST_CHUNK]
+    emit("decode_tput", f"fastpath_chunk{FAST_CHUNK}_speedup",
+         round(speedup, 2), "wall_chunk1/wall_chunkN")
+    artifact["fastpath_speedup"] = speedup
+    path = write_bench_artifact("decode", artifact)
+    emit("decode_tput", "artifact", path, "")
 
 
 def _optimized_row(arch: str, base_rec) -> None:
@@ -86,4 +134,9 @@ def best_rec_devices(rec) -> int:
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="live smoke rows + BENCH artifact only (no "
+                         "dry-run-derived tables)")
+    main(smoke=ap.parse_args().smoke)

@@ -9,32 +9,95 @@ alongside.
 """
 from __future__ import annotations
 
+import time
+
 from benchmarks.common import (PEAK_FLOPS, emit, ensure_dryrun,
-                               step_time_from_record)
+                               step_time_from_record, write_bench_artifact)
 
 ARCHS = ["qwen3-8b", "granite-3-2b", "olmoe-1b-7b", "deepseek-r1"]
 SHAPE = "prefill_32k"
 TOKENS = 32 * 32768
 
+# live smoke measurement (chunked suffix prefill vs full prefill)
+LIVE_PROMPT = 24
+LIVE_SHARED = 16
+LIVE_REQS = 6
+LIVE_REPEATS = 3
 
-def main() -> None:
+
+def main(smoke: bool = False) -> None:
     print("name,metric,value,derived")
-    for arch in ARCHS:
-        rec = ensure_dryrun(arch, SHAPE)
-        if rec is None:
-            emit("prefill_tput", f"{arch}_tokens_per_s_per_chip", "NA",
-                 "dryrun_missing")
-            continue
-        t = step_time_from_record(rec)
-        tput = TOKENS / t / rec["n_devices"]
-        per_tflops = tput / (PEAK_FLOPS / 1e12)
-        emit("prefill_tput", f"{arch}_tokens_per_s_per_chip", round(tput),
-             f"dom={rec['dominant']}")
-        emit("prefill_tput", f"{arch}_tokens_per_s_per_TFLOPS",
-             round(per_tflops, 2), f"step_ms={t*1e3:.0f}")
-    emit("prefill_tput", "paper_deepseek_r1_per_NPU", 6688,
-         "CloudMatrix-Infer_perfect_EPLB (4.45 tok/s/TFLOPS)")
+    if not smoke:
+        for arch in ARCHS:
+            rec = ensure_dryrun(arch, SHAPE)
+            if rec is None:
+                emit("prefill_tput", f"{arch}_tokens_per_s_per_chip", "NA",
+                     "dryrun_missing")
+                continue
+            t = step_time_from_record(rec)
+            tput = TOKENS / t / rec["n_devices"]
+            per_tflops = tput / (PEAK_FLOPS / 1e12)
+            emit("prefill_tput", f"{arch}_tokens_per_s_per_chip", round(tput),
+                 f"dom={rec['dominant']}")
+            emit("prefill_tput", f"{arch}_tokens_per_s_per_TFLOPS",
+                 round(per_tflops, 2), f"step_ms={t*1e3:.0f}")
+        emit("prefill_tput", "paper_deepseek_r1_per_NPU", 6688,
+             "CloudMatrix-Infer_perfect_EPLB (4.45 tok/s/TFLOPS)")
+    _live_rows()
+
+
+def _live_rows() -> None:
+    """Wall-clock prefill throughput of the live engine at smoke scale —
+    fresh prompts vs EMS prefix reuse (chunked suffix fast path) — persisted
+    to BENCH_prefill.json."""
+    import numpy as np
+
+    from benchmarks.common import LIVE_ARCH, live_model
+    from repro.mempool import ContextCache, MemoryPool
+    from repro.serving import PrefillEngine, Request
+
+    cfg, params = live_model()
+    pool = MemoryPool(n_nodes=4)
+    cc = ContextCache(pool, block_tokens=8, model_tag=cfg.name)
+    eng = PrefillEngine(params, cfg, capacity=LIVE_PROMPT + 8,
+                        context_cache=cc)
+    rng = np.random.RandomState(0)
+    shared = list(rng.randint(0, cfg.vocab_size, LIVE_SHARED))
+    reqs = [Request(i, shared + list(rng.randint(0, cfg.vocab_size,
+                                                 LIVE_PROMPT - LIVE_SHARED)),
+                    1) for i in range(LIVE_REQS)]
+    eng.run(reqs[0])                       # warm: compile + seed the cache
+    t0 = time.perf_counter()
+    reused = computed = 0
+    for _ in range(LIVE_REPEATS):
+        for r in reqs:
+            _, _, res = eng.run(r)
+            reused += res.reused_tokens
+            computed += res.computed_tokens
+    wall = time.perf_counter() - t0
+    tput = (reused + computed) / wall
+    emit("prefill_tput", "live_smoke_tokens_per_wall_s", round(tput, 1),
+         f"reused={reused};computed={computed};wall_s={wall:.3f}")
+    artifact = {
+        "config": {"arch": LIVE_ARCH, "prompt_len": LIVE_PROMPT,
+                   "shared_prefix": LIVE_SHARED, "requests": LIVE_REQS,
+                   "repeats": LIVE_REPEATS,
+                   "suffix_chunk": eng.suffix_chunk},
+        "tokens_per_s": tput,
+        "wall_s": wall,
+        "reused_tokens": reused,
+        "computed_tokens": computed,
+        "tpot_p50_ms": None,               # prefill-side bench: no decode
+        "tpot_p99_ms": None,
+        "decode_chunk": None,
+    }
+    path = write_bench_artifact("prefill", artifact)
+    emit("prefill_tput", "artifact", path, "")
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="live smoke rows + BENCH artifact only")
+    main(smoke=ap.parse_args().smoke)

@@ -61,6 +61,62 @@ def emit(name: str, metric: str, value, derived: str = "") -> None:
     print(f"{name},{metric},{value},{derived}")
 
 
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def write_bench_artifact(name: str, payload: Dict) -> str:
+    """Persist a benchmark record as BENCH_<name>.json at the repo root so
+    the perf trajectory is trackable PR-over-PR."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 1, "bench": name, **payload}, f, indent=1,
+                  sort_keys=True)
+        f.write("\n")
+    return path
+
+
+# ---------------------------------------------------------------------------
+# DecodeCostModel calibration from the dry-run roofline records
+# (ROADMAP open item — placeholder defaults only when no record exists).
+# ---------------------------------------------------------------------------
+
+
+def kv_bytes_per_request(cfg, context: int = 32768) -> float:
+    """Per-request KV/latent cache bytes at `context` (bf16) — the strictly
+    batch-proportional HBM traffic of one decode step."""
+    if cfg.attention_kind == "mla":
+        return cfg.num_layers * context * (cfg.kv_lora_rank
+                                           + cfg.qk_rope_head_dim) * 2
+    if cfg.attention_kind in ("causal", "bidirectional") and cfg.num_kv_heads:
+        return cfg.num_layers * context * 2 * cfg.num_kv_heads \
+            * cfg.head_dim * 2
+    return 0.0
+
+
+_calibrated_costs: Dict = {}
+
+
+def calibrated_decode_cost(arch: str, shape: str = "decode_32k",
+                           batch: int = 128):
+    """DecodeCostModel from the arch's compiled dry-run record; falls back
+    to the placeholder defaults when no record (or no KV traffic) exists.
+    Memoized: live_smoke_serve calls this inside timed benchmark loops."""
+    from repro.configs import get_config
+    from repro.serving.scheduler import decode_cost_from_roofline
+
+    key = (arch, shape, batch)
+    if key not in _calibrated_costs:
+        rec = load_dryrun(arch, shape)
+        if rec is None:
+            _calibrated_costs[key] = decode_cost_from_roofline(None, 0.0, 0.0)
+        else:
+            cfg = get_config(arch)
+            _calibrated_costs[key] = decode_cost_from_roofline(
+                rec, kv_bytes_per_request(cfg), batch / rec["n_devices"],
+                HBM_BW)
+    return _calibrated_costs[key]
+
+
 # ---------------------------------------------------------------------------
 # Live-scheduler smoke harness (shared by bench_tpot_slo and
 # bench_decode_throughput so their request streams stay comparable).
@@ -75,34 +131,47 @@ _live_model = None
 _live_systems: Dict[int, object] = {}
 
 
-def live_smoke_serve(*, decode_batch: int, tpot_budget_ms=None,
-                     admission: str = "shed"):
-    """Serve the canonical smoke request stream; returns (results,
-    scheduler). The ServingSystem (and its jitted prefill/decode steps) is
-    cached per decode_batch — only the scheduler, which traces no
-    computation, is rebuilt per sweep point."""
+def live_model():
     global _live_model
     import jax
-    import numpy as np
 
     from repro.configs import get_config, smoke_variant
     from repro.models import init_params
-    from repro.serving import Request, SchedulerConfig, ServingSystem
 
     if _live_model is None:
         cfg = smoke_variant(get_config(LIVE_ARCH))
         _live_model = (cfg, init_params(jax.random.PRNGKey(0), cfg))
-    cfg, params = _live_model
+    return _live_model
+
+
+def live_smoke_serve(*, decode_batch: int, tpot_budget_ms=None,
+                     admission: str = "shed", decode_chunk: int = 1,
+                     max_new: int = LIVE_MAX_NEW):
+    """Serve the canonical smoke request stream; returns (results,
+    scheduler). The ServingSystem (and its jitted prefill/decode steps) is
+    cached per (decode_batch, decode_chunk) — only the scheduler, which
+    traces no computation, is rebuilt per sweep point. The decode cost
+    model is calibrated from the arch's dry-run roofline record when one
+    exists (placeholder defaults otherwise)."""
+    import numpy as np
+
+    from repro.serving import Request, SchedulerConfig, ServingSystem
+
+    cfg, params = live_model()
     rng = np.random.RandomState(0)
     reqs = [Request(i, list(rng.randint(0, cfg.vocab_size, LIVE_PROMPT_LEN)),
-                    LIVE_MAX_NEW) for i in range(LIVE_REQUESTS)]
-    system = _live_systems.get(decode_batch)
+                    max_new) for i in range(LIVE_REQUESTS)]
+    key = (decode_batch, decode_chunk, max_new)
+    system = _live_systems.get(key)
     if system is None:
-        system = ServingSystem(params, cfg, n_prefill=2,
-                               decode_batch=decode_batch,
-                               capacity=LIVE_PROMPT_LEN + LIVE_MAX_NEW + 16)
-        _live_systems[decode_batch] = system
+        system = ServingSystem(
+            params, cfg, n_prefill=2, decode_batch=decode_batch,
+            capacity=LIVE_PROMPT_LEN + max_new + 16,
+            decode_chunk=decode_chunk)
+        _live_systems[key] = system
     system.reconfigure_scheduler(
-        SchedulerConfig(tpot_budget_ms=tpot_budget_ms, admission=admission))
+        SchedulerConfig(tpot_budget_ms=tpot_budget_ms, admission=admission,
+                        decode_chunk=decode_chunk,
+                        decode_cost=calibrated_decode_cost(LIVE_ARCH)))
     results = system.serve(reqs)
     return results, system.scheduler

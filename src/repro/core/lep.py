@@ -86,12 +86,19 @@ def make_lep_moe_fn(
     capacity_align: int = 8,
     use_quant_kernel: bool = False,
     naive: bool = False,
+    pack_scales: bool = True,
 ):
     """Build a MoeFn executing routed experts with shard_map LEP.
 
     ``naive=True`` reproduces the paper's Fig. 10a baseline: BF16 payloads
     (no early quantization) plus an explicit routing-metadata all_to_all —
     the configuration FusedDispatch/FusedCombine improve upon.
+
+    ``pack_scales`` (default on) rides the per-row fp32 dequant scale inside
+    the int8 dispatch payload (bitcast to 4 trailing int8 lanes), so the
+    quantized dispatch hop issues exactly ONE all_to_all — the paper's
+    FusedDispatch "one collective per hop" property. ``pack_scales=False``
+    keeps the two-collective (payload + scales) baseline for comparison.
     """
     mesh_axes = tuple(mesh.axis_names)
     n_dev = math.prod(mesh.shape[a] for a in mesh_axes)
@@ -162,10 +169,24 @@ def make_lep_moe_fn(
 
             if quantize:   # early quantization BEFORE the collective
                 q, scale = _quantize_rows(buf, use_quant_kernel)
-                q4 = q.reshape(ep_total, slots_loc, cap, d)
-                s4 = scale.reshape(ep_total, slots_loc, cap, 1)
-                q_recv = jax.lax.all_to_all(q4, ep_axes, 0, 0)
-                s_recv = jax.lax.all_to_all(s4, ep_axes, 0, 0)
+                if pack_scales:
+                    # Single-collective dispatch: bitcast each row's fp32
+                    # scale to 4 int8 lanes riding at the payload tail, so
+                    # the hop is ONE all_to_all instead of payload + scales.
+                    sb = jax.lax.bitcast_convert_type(scale, jnp.int8)
+                    packed = jnp.concatenate(
+                        [q, sb.reshape(slots, cap, 4)], axis=-1)
+                    p4 = packed.reshape(ep_total, slots_loc, cap, d + 4)
+                    p_recv = jax.lax.all_to_all(p4, ep_axes, 0, 0)
+                    q_recv = p_recv[..., :d]
+                    s_recv = jax.lax.bitcast_convert_type(
+                        p_recv[..., d:].reshape(ep_total, slots_loc, cap, 1, 4),
+                        jnp.float32)
+                else:
+                    q4 = q.reshape(ep_total, slots_loc, cap, d)
+                    s4 = scale.reshape(ep_total, slots_loc, cap, 1)
+                    q_recv = jax.lax.all_to_all(q4, ep_axes, 0, 0)
+                    s_recv = jax.lax.all_to_all(s4, ep_axes, 0, 0)
                 recv = q_recv.astype(jnp.float32) * s_recv
                 recv = recv.astype(x_loc.dtype)
             else:

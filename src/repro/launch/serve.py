@@ -3,7 +3,8 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
       --n-requests 6 --prompt-len 24 --max-new 8 [--mtp] [--no-cache] \
       [--policy least_loaded|round_robin|queue_depth] \
-      [--tpot-budget-ms 15 --admission queue|shed] [--interleave] [--trace]
+      [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
+      [--decode-chunk 4] [--trace]
 """
 from __future__ import annotations
 
@@ -42,6 +43,9 @@ def main() -> None:
                     help="hold or reject prefills that would break the SLO")
     ap.add_argument("--interleave", action="store_true",
                     help="pair two decode microbatches per step (§4.2.3)")
+    ap.add_argument("--decode-chunk", type=int, default=1,
+                    help="decode iterations per host sync (scanned "
+                         "device-resident decode fast path)")
     ap.add_argument("--trace", action="store_true",
                     help="dump the structured per-request trace as JSON")
     args = ap.parse_args()
@@ -68,7 +72,8 @@ def main() -> None:
                            mtp_params=mtp_params, policy=args.policy,
                            tpot_budget_ms=args.tpot_budget_ms,
                            admission=args.admission,
-                           interleave=args.interleave)
+                           interleave=args.interleave,
+                           decode_chunk=args.decode_chunk)
     t0 = time.time()
     results = system.serve(reqs)
     dt = time.time() - t0

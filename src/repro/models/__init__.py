@@ -1,9 +1,12 @@
 from repro.models.model import (  # noqa: F401
     build_plan,
+    cache_batch_axes,
+    decode_loop,
     decode_step,
     forward,
     init_params,
     lm_loss,
     make_caches,
     prefill,
+    prefill_continue,
 )

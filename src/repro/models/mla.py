@@ -218,6 +218,49 @@ def mla_decode(p: dict, x: jax.Array, cache: jax.Array, cache_len: jax.Array,
     return out, cache
 
 
+def mla_extend(p: dict, x: jax.Array, cache: jax.Array, offset: jax.Array,
+               cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Absorbed-form teacher-forced continuation — the S-token
+    generalization of :func:`mla_decode` used by chunked suffix prefill.
+
+    x: (B, S, D) at positions ``offset .. offset+S-1``; cache:
+    (B, cap, kvr+rope) with the first ``offset`` rows valid. Returns
+    (out (B,S,D), new cache)."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    cap = cache.shape[1]
+    q_pos = offset + jnp.arange(s, dtype=jnp.int32)
+    positions = jnp.broadcast_to(q_pos[None], (b, s))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(p, x, cfg, positions)
+
+    new_entry = jnp.concatenate([c_kv, k_rope], axis=-1)     # (B,S,kvr+rope)
+    cache = jax.lax.dynamic_update_slice_in_dim(
+        cache, new_entry.astype(cache.dtype), offset, axis=1)
+
+    wk = p["wk_b"].reshape(kvr, h, nope)
+    q_lat = jnp.einsum("bshe,rhe->bshr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))
+    scale = 1.0 / ((nope + rope) ** 0.5)
+    ck = cache[..., :kvr].astype(jnp.float32)                # (B,cap,kvr)
+    kr = cache[..., kvr:].astype(jnp.float32)                # (B,cap,rope)
+    scores = (
+        jnp.einsum("bshr,btr->bhst", q_lat, ck)
+        + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32), kr)
+    ) * scale
+    kv_idx = jnp.arange(cap, dtype=jnp.int32)
+    mask = kv_idx[None, :] <= q_pos[:, None]                 # (S, cap)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, ck)          # (B,S,H,kvr)
+    wv = p["wv_b"].reshape(kvr, h, vd)
+    out = jnp.einsum("bshr,rhe->bshe", o_lat, wv.astype(jnp.float32))
+    out = out.reshape(b, s, h * vd).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    return out, cache
+
+
 def make_mla_cache(cfg: ModelConfig, n_layers: int, batch: int, seq_len: int,
                    dtype=jnp.bfloat16) -> jax.Array:
     width = cfg.kv_lora_rank + cfg.qk_rope_head_dim

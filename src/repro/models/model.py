@@ -11,8 +11,11 @@ Families → segment plans:
   hybrid (zamba2)     : [mamba groups of ``attn_every`` + one *shared* attention
                          block applied after each group] + [mamba tail]
 
-Three entry points: ``forward`` (full-sequence, training), ``prefill``
-(full-sequence + cache materialization), ``decode_step`` (one token).
+Five entry points: ``forward`` (full-sequence, training), ``prefill``
+(full-sequence + cache materialization), ``decode_step`` (one token),
+``decode_loop`` (N scanned decode steps with on-device greedy sampling —
+the serving fast path), and ``prefill_continue`` (teacher-forced suffix
+continuation against an existing cache, the EMS-reuse fast path).
 MoE execution is pluggable via ``moe_fn`` — default is the single-device
 capacity implementation; ``core/lep.py`` supplies the shard_map LEP version.
 """
@@ -421,6 +424,247 @@ def decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 "shared_kv": KVCache(nk, nv, cache_len + 1),
             }
     logits = unembed(params, cfg, x[:, 0:1, :])[:, 0, :]
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache pytree structure helpers (shared with serving/cache_ops.py)
+# ---------------------------------------------------------------------------
+
+
+def cache_batch_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Pytree of batch-axis indices matching the make_caches structure
+    (None = unbatched leaf, e.g. length scalars)."""
+    axes: Dict[str, Any] = {}
+    for seg in build_plan(cfg):
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                axes[seg.name] = {"mla": 1, "length": None}
+            else:
+                axes[seg.name] = KVCache(1, 1, None)
+        elif seg.kind == "mamba_tail":
+            axes[seg.name] = SSMState(1, 1, None)
+        else:
+            axes[seg.name] = {
+                "ssm": {"h": 2, "conv": 2, "length": None},
+                "length": None,
+                "shared_kv": KVCache(1, 1, None),
+            }
+    return axes
+
+
+def _with_lengths(cfg: ModelConfig, caches: Dict[str, Any],
+                  length: jax.Array) -> Dict[str, Any]:
+    """Return caches with every bookkeeping ``length`` leaf set to ``length``
+    (decode_loop carries per-slot lengths, so the leaves must keep a stable
+    (B,) shape across scan iterations)."""
+    out = dict(caches)
+    for seg in build_plan(cfg):
+        c = out[seg.name]
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                out[seg.name] = {**c, "length": length}
+            else:
+                out[seg.name] = KVCache(c.k, c.v, length)
+        elif seg.kind == "mamba_tail":
+            out[seg.name] = SSMState(c.h, c.conv, length)
+        else:
+            out[seg.name] = {
+                **c,
+                "ssm": {**c["ssm"], "length": length},
+                "length": length,
+                "shared_kv": KVCache(c["shared_kv"].k, c["shared_kv"].v,
+                                     length),
+            }
+    return out
+
+
+def _cache_capacity(cfg: ModelConfig, caches: Dict[str, Any]) -> Optional[int]:
+    """Static token capacity of the tightest non-ring sequence buffer
+    (None when nothing bounds decode length, e.g. pure-SSM or all-ring)."""
+    caps = []
+    for seg in build_plan(cfg):
+        c = caches[seg.name]
+        if seg.kind in ("dense", "moe"):
+            if cfg.attention_kind == "mla":
+                caps.append(c["mla"].shape[2])
+            else:
+                cap = c.k.shape[2]
+                if not (cfg.sliding_window and cap == cfg.sliding_window):
+                    caps.append(cap)
+        elif seg.kind == "mamba_groups":
+            cap = c["shared_kv"].k.shape[2]
+            if not (cfg.sliding_window and cap == cfg.sliding_window):
+                caps.append(cap)
+    return min(caps) if caps else None
+
+
+def decode_ready_caches(params: dict, cfg: ModelConfig,
+                        caches: Dict[str, Any], cache_len: jax.Array,
+                        moe_fn: Optional[MoeFn] = None,
+                        step_fn: Optional[Callable] = None) -> Dict[str, Any]:
+    """Normalize a fresh cache pytree to decode's shape/dtype fixed point:
+    per-slot ``length`` leaves and post-step state dtypes (e.g. the hybrid
+    conv window, bf16 after prefill -> f32 after one step; the upcast is
+    exact). Keeps ``lax.scan`` carries stable and lets donated cache
+    buffers alias input->output from the very first jitted step."""
+    b = cache_len.shape[0]
+    if step_fn is None:
+        def step_fn(t, c, l):
+            return decode_step(params, cfg, t, c, l, moe_fn)
+    caches = _with_lengths(cfg, caches, cache_len)
+    tok = jnp.zeros((b, 1), jnp.int32)
+    for _ in range(2):
+        try:
+            out = jax.eval_shape(step_fn, tok, caches, cache_len)[1]
+        except Exception:       # exotic step_fn: skip dtype stabilization
+            break
+        if all(c.dtype == o.dtype for c, o in
+               zip(jax.tree.leaves(caches), jax.tree.leaves(out))):
+            break
+        caches = jax.tree.map(
+            lambda c, o: c if c.dtype == o.dtype else c.astype(o.dtype),
+            caches, out)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Scanned multi-step decode (device-resident fast path)
+# ---------------------------------------------------------------------------
+
+
+def decode_loop(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                caches: Dict[str, Any], cache_len: jax.Array, n_steps: int,
+                *, steps_left: Optional[jax.Array] = None,
+                moe_fn: Optional[MoeFn] = None,
+                step_fn: Optional[Callable] = None
+                ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                           Dict[str, Any], jax.Array]:
+    """``n_steps`` greedy decode iterations in one ``lax.scan`` — N tokens
+    per host sync instead of one.
+
+    Sampling (argmax) happens on-device, and per-slot done/capacity masking
+    keeps finished or capacity-full slots frozen: their token, cache content,
+    and ``cache_len`` hold bit-exactly while live slots advance, so a chunked
+    engine emits token-identical output to ``n_steps`` sequential
+    :func:`decode_step` calls.
+
+    tokens: (B,) int32 current token per slot; cache_len: (B,) int32 (scalars
+    are broadcast). steps_left: (B,) int32 tokens each slot still wants
+    (defaults to ``n_steps`` everywhere). ``step_fn`` overrides the inner
+    ``(tokens (B,1), caches, cache_len) -> (logits, caches)`` step — the
+    hook the microbatch interleaver wraps.
+
+    Returns ``(emitted (B, n_steps), live (B, n_steps), tokens (B,), caches,
+    cache_len)``; ``emitted[:, j]`` is meaningful only where ``live[:, j]``.
+    """
+    if tokens.ndim != 1:
+        raise ValueError(f"decode_loop wants tokens of shape (B,), "
+                         f"got {tokens.shape}")
+    b = tokens.shape[0]
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    if steps_left is None:
+        steps_left = jnp.full((b,), n_steps, jnp.int32)
+    if step_fn is None:
+        mf = moe_fn
+
+        def step_fn(t, c, l):  # noqa: E731 — default inner step
+            return decode_step(params, cfg, t, c, l, mf)
+
+    cap = _cache_capacity(cfg, caches)
+    axes = cache_batch_axes(cfg)
+    caches = decode_ready_caches(params, cfg, caches, cache_len,
+                                 step_fn=step_fn)
+
+    def _select(mask, new, old, ax):
+        if ax is None:
+            return new
+        shape = [1] * new.ndim
+        shape[ax] = b
+        return jnp.where(mask.reshape(shape), new, old)
+
+    def body(carry, _):
+        tok, cl, left, cs = carry
+        live = left > 0
+        if cap is not None:
+            live &= cl < cap
+        logits, ncs = step_fn(tok[:, None], cs, cl)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(live, nxt, tok)
+        cl = cl + live.astype(jnp.int32)
+        left = left - live.astype(jnp.int32)
+        ncs = jax.tree.map(
+            lambda n, o, ax: _select(live, n, o, ax), ncs, cs, axes)
+        ncs = _with_lengths(cfg, ncs, cl)
+        return (tok, cl, left, ncs), (nxt, live)
+
+    (tokens, cache_len, _, caches), (em, lv) = jax.lax.scan(
+        body, (tokens, cache_len, steps_left, caches), None, length=n_steps)
+    return em.T, lv.T, tokens, caches, cache_len
+
+
+# ---------------------------------------------------------------------------
+# Chunked suffix prefill (teacher-forced continuation, EMS-reuse fast path)
+# ---------------------------------------------------------------------------
+
+
+def prefill_continue(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                     caches: Dict[str, Any], offset: jax.Array,
+                     moe_fn: Optional[MoeFn] = None
+                     ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Teacher-forced continuation: run ``tokens`` (B, S) at positions
+    ``offset .. offset+S-1`` against caches whose first ``offset`` positions
+    are valid — the whole suffix in ONE call instead of S ``decode_step``
+    round-trips. Also serves as the long-prompt chunk step (advance
+    ``offset`` between calls). Returns (logits (B, S, V), new caches).
+
+    Attention/MLA archs only: SSM state is not token-addressable. Callers
+    must not pass *wrapped* ring caches (serving gates this path on
+    ``attention.is_ring(cfg, capacity)`` — a ring buffer's wraparound write
+    pattern is indistinguishable from a plain cache by shape alone, and a
+    plain cache whose capacity merely equals ``sliding_window`` is fine)."""
+    moe_fn = moe_fn or moe_mod.moe_capacity
+    if cfg.is_ssm or cfg.is_hybrid or cfg.attention_kind not in ("causal",
+                                                                 "mla"):
+        raise NotImplementedError(
+            "prefill_continue requires a causal-attention or MLA arch")
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    b, s, _ = x.shape
+    offset = jnp.asarray(offset, jnp.int32)
+    new_caches: Dict[str, Any] = {}
+    for seg in build_plan(cfg):
+        seg_params = params["segments"][seg.name]
+        cache = caches[seg.name]
+        if cfg.attention_kind == "mla":
+            def body(h, xs, seg=seg):
+                pl, c = xs
+                hin = rms_norm(h, pl["attn"]["ln"], cfg.norm_eps)
+                out, nc = mla_mod.mla_extend(pl["attn"], hin, c, offset, cfg)
+                h = h + out
+                if seg.kind == "moe":
+                    h, _ = _moe_block(pl["moe"], h, cfg, moe_fn)
+                else:
+                    h = _mlp_block(pl["mlp"], h, cfg)
+                return h, nc
+
+            x, new_mla = _scan(body, x, (seg_params, cache["mla"]))
+            new_caches[seg.name] = {"mla": new_mla, "length": offset + s}
+        else:
+            def body(h, xs, seg=seg):
+                pl, ck, cv = xs
+                hin = rms_norm(h, pl["attn"]["ln"], cfg.norm_eps)
+                out, nk, nv = attn_mod.attention_extend(pl["attn"], hin, ck,
+                                                        cv, offset, cfg)
+                h = h + out
+                if seg.kind == "moe":
+                    h, _ = _moe_block(pl["moe"], h, cfg, moe_fn)
+                else:
+                    h = _mlp_block(pl["mlp"], h, cfg)
+                return h, (nk, nv)
+
+            x, (nk, nv) = _scan(body, x, (seg_params, cache.k, cache.v))
+            new_caches[seg.name] = KVCache(nk, nv, offset + s)
+    logits = unembed(params, cfg, x)
     return logits, new_caches
 
 

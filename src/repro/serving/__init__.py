@@ -20,6 +20,7 @@ from repro.serving.scheduler import (  # noqa: F401
     SchedulerConfig,
     SlotError,
     SLOTracker,
+    decode_cost_from_roofline,
     make_router,
 )
 from repro.serving.transfer import (  # noqa: F401

@@ -7,6 +7,7 @@ blocks for the EMS context cache.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -17,28 +18,15 @@ from repro.configs.base import ModelConfig
 from repro.models.attention import KVCache
 from repro.models.mamba2 import SSMState
 from repro.models.model import build_plan, make_caches
+from repro.models.model import cache_batch_axes as _model_cache_batch_axes
 
 
 def cache_batch_axes(cfg: ModelConfig, caches: Dict[str, Any]) -> Dict[str, Any]:
     """Pytree of batch-axis indices matching the cache structure
-    (None = unbatched leaf, e.g. length scalars)."""
-    axes: Dict[str, Any] = {}
-    for seg in build_plan(cfg):
-        c = caches[seg.name]
-        if seg.kind in ("dense", "moe"):
-            if cfg.attention_kind == "mla":
-                axes[seg.name] = {"mla": 1, "length": None}
-            else:
-                axes[seg.name] = KVCache(1, 1, None)
-        elif seg.kind == "mamba_tail":
-            axes[seg.name] = SSMState(1, 1, None)
-        else:
-            axes[seg.name] = {
-                "ssm": {"h": 2, "conv": 2, "length": None},
-                "length": None,
-                "shared_kv": KVCache(1, 1, None),
-            }
-    return axes
+    (None = unbatched leaf, e.g. length scalars). The structure is derived
+    from cfg alone; ``caches`` is accepted for call-site symmetry."""
+    del caches
+    return _model_cache_batch_axes(cfg)
 
 
 def _map2(fn, tree, axes):
@@ -100,6 +88,34 @@ def seq_insert(cfg: ModelConfig, caches, payload: Dict[str, Any], start: int):
                 jax.lax.dynamic_update_slice_in_dim(c.v, v.astype(c.v.dtype), start, axis=2),
                 c.length)
     return new
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def _pack_blocks(cfg: ModelConfig, caches, n_blocks: int, block: int) -> jax.Array:
+    """Jitted batched EMS pack: all block payloads in one slice+pack."""
+    payload = seq_slice(cfg, caches, 0, n_blocks * block)
+    rows = []
+    for leaf in jax.tree.leaves(payload):
+        # leaf: (L, B, n_blocks*block, ...) — bring the block index to the
+        # front so row ``bi`` ravels exactly like
+        # ``pack_payload(seq_slice(cfg, caches, bi*block, block))``.
+        l, b = leaf.shape[0], leaf.shape[1]
+        x = leaf.reshape((l, b, n_blocks, block) + leaf.shape[3:])
+        x = jnp.moveaxis(x, 2, 0).astype(jnp.float32).reshape(n_blocks, -1)
+        rows.append(x)
+    return jnp.concatenate(rows, axis=1)
+
+
+def pack_blocks(cfg: ModelConfig, caches, n_blocks: int,
+                block: int) -> List[np.ndarray]:
+    """Build every EMS block payload for tokens [0, n_blocks*block) in ONE
+    jitted slice+pack instead of a Python ``seq_slice``/``pack_payload``
+    round-trip per block. Row ``bi`` is byte-identical to
+    ``pack_payload(seq_slice(cfg, caches, bi*block, block))``."""
+    if n_blocks <= 0:
+        return []
+    flat = np.asarray(_pack_blocks(cfg, caches, n_blocks, block))
+    return [flat[bi] for bi in range(n_blocks)]
 
 
 def pack_payload(payload: Dict[str, Any]) -> np.ndarray:

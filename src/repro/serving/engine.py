@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import mtp as mtp_mod
 from repro.mempool.context_cache import ContextCache
+from repro.models import attention as attn_mod
 from repro.models import model as model_mod
 from repro.serving import cache_ops
 from repro.serving.scheduler import (
@@ -39,6 +40,7 @@ from repro.serving.scheduler import (
     MicrobatchInterleaver,
     Scheduler,
     SchedulerConfig,
+    SlotError,
 )
 from repro.serving.transfer import KVTransferEngine
 
@@ -69,18 +71,33 @@ class RequestResult:
 
 
 class PrefillEngine:
+    #: tokens per jitted prefill_continue call on the EMS-reuse suffix path
+    #: (the tail chunk is padded to this length, so exactly one program is
+    #: compiled regardless of suffix length).
+    SUFFIX_CHUNK = 32
+
     def __init__(self, params, cfg: ModelConfig, capacity: int,
                  context_cache: Optional[ContextCache] = None,
-                 instance_id: int = 0, moe_fn=None):
+                 instance_id: int = 0, moe_fn=None,
+                 suffix_chunk: Optional[int] = None):
         self.params, self.cfg, self.capacity = params, cfg, capacity
         self.cc = context_cache
         self.instance_id = instance_id
         self.load = 0  # in-flight prompt tokens (scheduler signal)
+        self.suffix_chunk = suffix_chunk or self.SUFFIX_CHUNK
         self._prefill = jax.jit(
             lambda p, b: model_mod.prefill(p, cfg, b, capacity, moe_fn,
                                            cache_dtype=jnp.float32))
+        # Per-token fallback for archs prefill_continue cannot serve
+        # (ring-buffer caches). Cache buffers are donated: the suffix loop
+        # updates them in place instead of copying per step.
         self._step = jax.jit(
-            lambda p, t, c, l: model_mod.decode_step(p, cfg, t, c, l, moe_fn))
+            lambda p, t, c, l: model_mod.decode_step(p, cfg, t, c, l, moe_fn),
+            donate_argnums=(2,))
+        self._continue = jax.jit(
+            lambda p, t, c, off: model_mod.prefill_continue(p, cfg, t, c,
+                                                            off, moe_fn),
+            donate_argnums=(2,))
 
     def _fresh_cache(self):
         return model_mod.make_caches(self.cfg, 1, self.capacity, jnp.float32)
@@ -110,14 +127,38 @@ class PrefillEngine:
                                                       bi * self.cc.block)
             if reuse_len > 0:
                 # Suffix-only computation: teacher-forced continuation from
-                # the reused prefix (positions offset by reuse_len).
-                logits = None
-                cl = jnp.int32(reuse_len)
-                for tok in prompt[reuse_len:]:
-                    t = jnp.full((1, 1), tok, jnp.int32)
-                    logits, caches = self._step(self.params, t, caches, cl)
-                    cl = cl + 1
-                first = int(jnp.argmax(logits[0]))
+                # the reused prefix (positions offset by reuse_len). The
+                # whole suffix runs in chunked prefill_continue calls — one
+                # jitted dispatch per SUFFIX_CHUNK tokens instead of one per
+                # token (ring-buffer caches fall back to the token loop).
+                if attn_mod.is_ring(cfg, self.capacity):
+                    logits = None
+                    cl = jnp.int32(reuse_len)
+                    for tok in prompt[reuse_len:]:
+                        t = jnp.full((1, 1), tok, jnp.int32)
+                        logits, caches = self._step(self.params, t, caches, cl)
+                        cl = cl + 1
+                    last = logits[0]
+                else:
+                    rest = prompt[reuse_len:]
+                    ch, pos, st, last = self.suffix_chunk, reuse_len, 0, None
+                    while st < len(rest):
+                        # Call width: the suffix chunk, clamped to the cache
+                        # headroom so the padded write never overruns the
+                        # static capacity buffer.
+                        width = min(ch, self.capacity - pos)
+                        part = rest[st:st + width]
+                        # Pad the tail chunk; padded positions land beyond
+                        # the prompt's cache_len, so decode overwrites them
+                        # before they are ever attendable.
+                        toks = jnp.asarray([part + [0] * (width - len(part))],
+                                           jnp.int32)
+                        logits, caches = self._continue(
+                            self.params, toks, caches, jnp.int32(pos))
+                        pos += len(part)
+                        st += len(part)
+                        last = logits[0, len(part) - 1]
+                first = int(jnp.argmax(last))
                 res.computed_tokens = len(prompt) - reuse_len
             else:
                 batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
@@ -127,14 +168,12 @@ class PrefillEngine:
             res.reused_tokens = reuse_len
 
             # Store newly computed full blocks back to EMS (async IRL).
+            # One jitted slice+pack builds every block payload at once.
             if self.cc is not None and cfg.attention_kind != "none" \
                     and not cfg.is_hybrid:
                 n_blocks = len(prompt) // self.cc.block
-                payloads = []
-                for bi in range(n_blocks):
-                    sl = cache_ops.seq_slice(cfg, caches, bi * self.cc.block,
-                                             self.cc.block)
-                    payloads.append(cache_ops.pack_payload(sl))
+                payloads = cache_ops.pack_blocks(cfg, caches, n_blocks,
+                                                 self.cc.block)
                 if payloads:
                     self.cc.store(prompt[: n_blocks * self.cc.block], payloads)
             return first, caches, res
@@ -157,13 +196,24 @@ class _Slot:
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, max_batch: int, capacity: int,
                  moe_fn=None, use_mtp: bool = False, mtp_params=None, seed=0,
-                 interleave: bool = False, n_micro: int = 2):
+                 interleave: bool = False, n_micro: int = 2,
+                 decode_chunk: int = 1):
         self.params, self.cfg = params, cfg
         self.b, self.capacity = max_batch, capacity
         self.use_mtp = use_mtp
         self.mtp_params = mtp_params
+        self.decode_chunk = max(1, int(decode_chunk))
+        if use_mtp and self.decode_chunk > 1:
+            warnings.warn("decode_chunk > 1 is not compatible with MTP "
+                          "speculative decoding; falling back to per-step "
+                          "decode", stacklevel=2)
+            self.decode_chunk = 1
         self.caches = model_mod.make_caches(cfg, max_batch, capacity, jnp.float32)
         self.cache_len = jnp.zeros((max_batch,), jnp.int32)
+        # Shape/dtype fixed point up front: donated cache buffers then alias
+        # input->output from the first jitted step on every arch family.
+        self.caches = model_mod.decode_ready_caches(params, cfg, self.caches,
+                                                    self.cache_len, moe_fn)
         self.cur_tok = jnp.zeros((max_batch,), jnp.int32)
         self.draft_tok = jnp.zeros((max_batch,), jnp.int32)
         self.slot_mgr = DecodeSlotManager(max_batch, capacity)
@@ -194,11 +244,24 @@ class DecodeEngine:
             fn = interleaver.wrap(base, max_batch) if self.interleaved else base
             return fn(t, c, l)
 
-        self._step = jax.jit(_step)
+        # Cache buffers are donated so each jitted step reuses them in
+        # place instead of allocating + copying a fresh cache per token.
+        self._step = jax.jit(_step, donate_argnums=(2,))
+
+        def _loop(p, t, c, l, left):
+            base = lambda tt, cc, ll: model_mod.decode_step(  # noqa: E731
+                p, cfg, tt, cc, ll, moe_fn)
+            fn = interleaver.wrap(base, max_batch) if self.interleaved else base
+            return model_mod.decode_loop(p, cfg, t, c, l, self.decode_chunk,
+                                         steps_left=left, step_fn=fn)
+
+        self._loop = jax.jit(_loop, donate_argnums=(2,)) \
+            if self.decode_chunk > 1 else None
         if use_mtp:
             self._mtp_step = jax.jit(
                 lambda p, mp, x, d, c, l, k: mtp_mod.mtp_step(
-                    p, mp, cfg, x, d, c, l, k, moe_fn))
+                    p, mp, cfg, x, d, c, l, k, moe_fn),
+                donate_argnums=(4,))
 
     def free_slot(self) -> Optional[int]:
         return self.slot_mgr.free_slot()
@@ -222,8 +285,24 @@ class DecodeEngine:
         return self.slot_mgr.active
 
     def step(self) -> List[RequestResult]:
-        """One batched decode iteration. Returns requests finished this step."""
+        """One host-sync decode turn. Returns requests finished this turn."""
+        return self.step_chunk()[0]
+
+    def step_chunk(self) -> Tuple[List[RequestResult],
+                                  List[Tuple[List[int], List[int]]]]:
+        """One host-sync decode turn: ``decode_chunk`` device iterations per
+        jitted call on the fast path (one otherwise).
+
+        Returns ``(finished, iter_log)``; ``iter_log`` holds one
+        ``(active_rids, finished_rids)`` entry per device iteration actually
+        occupied, so the scheduler can attribute virtual-clock time
+        per-iteration even when many iterations share a single host sync.
+        """
+        if self.decode_chunk > 1 and not self.use_mtp:
+            return self._step_chunked()
+
         self.iters += 1
+        active_rids = [info.rid for _, info in self.slot_mgr.active_slots()]
         self.key, sub = jax.random.split(self.key)
         if self.use_mtp:
             emitted, accepted, x_next, d_next, self.caches, self.cache_len = \
@@ -258,7 +337,55 @@ class DecodeEngine:
             if slot.remaining <= 0:
                 finished.append(slot.result)
                 self.slot_mgr.release(i)
-        return finished
+        return finished, [(active_rids, [r.rid for r in finished])]
+
+    def _step_chunked(self) -> Tuple[List[RequestResult],
+                                     List[Tuple[List[int], List[int]]]]:
+        """Device-resident fast path: decode_chunk scanned iterations, one
+        host sync. Slot accounting is reconciled in DecodeSlotManager.advance
+        as the chunk drains, iteration by iteration."""
+        left = np.zeros((self.b,), np.int32)
+        for i, info in self.slot_mgr.active_slots():
+            left[i] = min(info.payload.remaining, self.decode_chunk)
+        emitted, live, self.cur_tok, self.caches, self.cache_len = \
+            self._loop(self.params, self.cur_tok, self.caches,
+                       self.cache_len, jnp.asarray(left))
+        em = np.asarray(emitted)
+        lv = np.asarray(live)
+
+        finished: List[RequestResult] = []
+        iter_log: List[Tuple[List[int], List[int]]] = []
+        for j in range(self.decode_chunk):
+            active_rids = [info.rid for _, info
+                           in self.slot_mgr.active_slots()]
+            if not active_rids:
+                break           # chunk drained early: nothing left to charge
+            self.iters += 1
+            fin_this: List[RequestResult] = []
+            for i, info in list(self.slot_mgr.active_slots()):
+                if not lv[i, j]:
+                    continue
+                slot: _Slot = info.payload
+                slot.result.decode_iters += 1
+                self.slot_mgr.advance(i, 1)
+                slot.result.tokens.append(int(em[i, j]))
+                slot.remaining -= 1
+                if slot.remaining <= 0:
+                    fin_this.append(slot.result)
+                    self.slot_mgr.release(i)
+            iter_log.append((active_rids, [r.rid for r in fin_this]))
+            finished.extend(fin_this)
+        # Enforce the capacity invariant the masked device loop would
+        # otherwise hide: a slot that still wants tokens but was never live
+        # this chunk is capacity-frozen — fail fast like per-step decode
+        # does via DecodeSlotManager.advance, instead of livelocking.
+        for i, info in list(self.slot_mgr.active_slots()):
+            if info.payload.remaining > 0 and not lv[i].any():
+                raise SlotError(
+                    f"rid={info.rid} cache_len {info.cache_len} has hit the "
+                    f"decode capacity {self.slot_mgr.capacity} with "
+                    f"{info.payload.remaining} tokens still requested")
+        return finished, iter_log
 
 
 # ---------------------------------------------------------------------------
@@ -294,12 +421,14 @@ class ServingSystem:
                  tpot_budget_ms: Optional[float] = None,
                  admission: Optional[str] = None,
                  interleave: Optional[bool] = None,
+                 decode_chunk: Optional[int] = None,
                  scheduler_config: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.cc = context_cache
         overrides = {k: v for k, v in (
             ("policy", policy), ("tpot_budget_ms", tpot_budget_ms),
             ("admission", admission), ("interleave_microbatches", interleave),
+            ("decode_chunk", decode_chunk),
         ) if v is not None}
         sched_cfg = dataclasses.replace(
             scheduler_config or SchedulerConfig(), **overrides)
@@ -308,7 +437,8 @@ class ServingSystem:
         self.decode = DecodeEngine(params, cfg, decode_batch, capacity,
                                    moe_fn, use_mtp, mtp_params,
                                    interleave=sched_cfg.interleave_microbatches,
-                                   n_micro=sched_cfg.n_micro)
+                                   n_micro=sched_cfg.n_micro,
+                                   decode_chunk=sched_cfg.decode_chunk)
         self.transfer = KVTransferEngine()
         self.scheduler = Scheduler(n_prefill, self.decode.slot_mgr, sched_cfg)
 
@@ -326,6 +456,10 @@ class ServingSystem:
                 "interleave_microbatches/n_micro are baked into the jitted "
                 "decode step at ServingSystem construction; build a new "
                 "system to change them")
+        if new.decode_chunk != cur.decode_chunk:
+            raise ValueError(
+                "decode_chunk is baked into the jitted decode loop at "
+                "ServingSystem construction; build a new system to change it")
         self.scheduler = Scheduler(len(self.prefills), self.decode.slot_mgr,
                                    scheduler_config)
 
@@ -382,6 +516,13 @@ class ServingSystem:
                 decision = sched.admission_decision(trace)
                 if decision == "admit":
                     slot = self.decode.free_slot()
+                    if slot is None:
+                        # Stale admission: the gate said "admit" but no slot
+                        # is actually free (gate/slot state diverged). Never
+                        # pass slot=None into DecodeSlotManager.allocate —
+                        # requeue and retry after the next decode turn.
+                        still_waiting.extend(waiting[idx:])
+                        break
                     self.decode.add(slot, item.caches, item.first,
                                     item.prompt_len, item.result, item.max_new)
                     sched.on_admit(trace, slot)
@@ -395,12 +536,13 @@ class ServingSystem:
                     still_waiting.extend(waiting[idx:])
                     break
             waiting = still_waiting
-            # decode step
+            # decode turn: decode_chunk device iterations per host sync on
+            # the fast path; the virtual clock is charged per iteration so
+            # trace/SLO semantics match per-step decode.
             if self.decode.active:
-                active_rids = [info.rid for _, info
-                               in self.decode.slot_mgr.active_slots()]
-                finished = self.decode.step()
-                sched.on_decode_step(active_rids, [r.rid for r in finished])
+                finished, iter_log = self.decode.step_chunk()
+                for active_rids, fin_rids in iter_log:
+                    sched.on_decode_step(active_rids, fin_rids)
                 for r in finished:
                     sched.on_finish(sched.traces[r.rid], len(r.tokens))
                 results.extend(finished)

@@ -309,6 +309,20 @@ class DecodeCostModel:
     fixed_s: float = 4e-3
     per_req_s: float = 1e-3
 
+    @classmethod
+    def from_roofline(cls, step_s: float, batch_per_chip: float,
+                      kv_read_s: float) -> "DecodeCostModel":
+        """Calibrate t(B) = fixed + B·per_req from one roofline point.
+
+        The per-request term is the per-request KV-cache read time (the only
+        strictly batch-proportional HBM traffic at decode) and the fixed term
+        absorbs the remainder (weight reads + collectives), floored at 20% of
+        the recorded step so a KV-dominated record cannot degenerate to
+        fixed≈0."""
+        per = max(kv_read_s, 1e-9)
+        fixed = max(step_s - batch_per_chip * per, 0.2 * step_s)
+        return cls(fixed_s=fixed, per_req_s=per)
+
     def step_time(self, batch: int) -> float:
         return self.fixed_s + batch * self.per_req_s
 
@@ -320,6 +334,27 @@ class DecodeCostModel:
         B-1."""
         b = int((tpot_budget_s - self.fixed_s) / self.per_req_s + 1e-9)
         return max(0, b)
+
+
+def decode_cost_from_roofline(record: Optional[Dict[str, Any]],
+                              kv_bytes_per_req: float,
+                              batch_per_chip: float,
+                              hbm_bw: float = 819e9) -> DecodeCostModel:
+    """DecodeCostModel calibrated from a compiled dry-run roofline record
+    (``experiments/dryrun/*.json``) instead of placeholder defaults.
+
+    ``record`` carries ``compute_s`` / ``memory_s`` / ``collective_s`` as
+    written by ``launch/dryrun.py``; the serial roofline step time is
+    ``max(compute, memory) + collective`` (same formula as
+    ``benchmarks.common.step_time_from_record``). Falls back to the
+    placeholder defaults when no record exists or the arch has no
+    per-request KV traffic to decompose by."""
+    if not record or kv_bytes_per_req <= 0 or batch_per_chip <= 0:
+        return DecodeCostModel()
+    step_s = max(record["compute_s"], record["memory_s"]) \
+        + record["collective_s"]
+    return DecodeCostModel.from_roofline(step_s, batch_per_chip,
+                                         kv_bytes_per_req / hbm_bw)
 
 
 class AdmissionGate:
@@ -451,6 +486,11 @@ class SchedulerConfig:
         default_factory=DecodeCostModel)
     interleave_microbatches: bool = False
     n_micro: int = 2
+    # Decode iterations per host sync (model.decode_loop scan length).
+    # 1 = per-step decode; >1 trades admission/trace granularity (requests
+    # join and the clock is reconciled only at chunk boundaries) for host
+    # round-trips amortized over `decode_chunk` tokens.
+    decode_chunk: int = 1
 
 
 class Scheduler:
