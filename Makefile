@@ -28,8 +28,11 @@ bench-slo:
 
 # Live-smoke perf rows only (no dry-run compiles); writes BENCH_decode.json
 # and BENCH_prefill.json at the repo root for PR-over-PR tracking.
+# bench_mtp runs after bench_decode_throughput: it merges the MTP section
+# (acceptance rate + fused-MTP speedup) into the same BENCH_decode.json.
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_mtp --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_prefill_throughput --smoke
 
 ci: smoke test bench-smoke

@@ -1,24 +1,35 @@
 """Paper Fig. 22: MTP ablation — decode throughput with/without MTP.
 
-Functional layer: the real mtp_step on a smoke model measures actual
-acceptance and tokens/iteration. Quantitative layer: throughput model at
-DeepSeek-R1 scale — MTP processes base + speculative tokens per iteration
-(+44% iteration latency per paper Fig. 22b) and emits 1+α tokens (α = 70%
-paper acceptance), evaluated across batch sizes like Fig. 22a."""
+Quantitative layer (full mode): throughput model at DeepSeek-R1 scale — MTP
+processes base + speculative tokens per iteration (+44% iteration latency
+per paper Fig. 22b) and emits 1+α tokens (α = 70% paper acceptance),
+evaluated across batch sizes like Fig. 22a.
+
+Functional layer (always, ``--smoke`` for CI): the fused scanned MTP fast
+path (``model.decode_loop_mtp`` with the one-forward base+draft verify) on
+the live smoke system, with a draft head distilled against the base model's
+own greedy continuations so acceptance is real rather than chance. Measures
+the acceptance rate and wall-clock tokens/s vs the decode_chunk-only fast
+path, and merges both into BENCH_decode.json (schema 2) so the MTP
+trajectory is tracked PR-over-PR."""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+import time
 
-from benchmarks.common import emit, ensure_dryrun, step_time_from_record
+from benchmarks.common import (emit, ensure_dryrun, live_model,
+                               live_mtp_params, live_smoke_serve,
+                               step_time_from_record, update_bench_artifact)
 
 ACCEPT = 0.70
 LAT_FACTOR = 1.44
 
+# fused-path smoke measurement (wall clock, live smoke system)
+MTP_CHUNK = 4
+MTP_MAX_NEW = 16
+MTP_REPEATS = 5          # median-of-N: the CI container is noisy
 
-def main() -> None:
-    print("name,metric,value,derived")
+
+def roofline_rows() -> None:
     rec = ensure_dryrun("deepseek-r1", "decode_32k")
     if rec:
         t_base = step_time_from_record(rec)
@@ -33,31 +44,108 @@ def main() -> None:
             emit("mtp", f"batch{batch}_speedup_pct",
                  round((tput1 / tput0 - 1) * 100, 1),
                  f"paper_Fig22a:+6-49% (smaller batch => larger gain)")
-    # functional acceptance measurement on the smoke model
-    from repro.configs import get_config, smoke_variant
-    from repro.core import init_mtp_params
-    from repro.core.mtp import mtp_step, propose_draft
-    from repro.models import init_params, prefill
-    cfg = smoke_variant(get_config("qwen3-8b"))
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    mtp = init_mtp_params(jax.random.PRNGKey(1), cfg)
-    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, cfg.vocab_size)
-    logits, caches = prefill(params, cfg, {"tokens": toks}, capacity=64,
-                             cache_dtype=jnp.float32)
-    x = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-    d = propose_draft(params, mtp, cfg, x)
-    cl = jnp.full((2,), 16, jnp.int32)
-    key = jax.random.PRNGKey(3)
-    accepts, iters = 0, 10
-    for _ in range(iters):
-        key, sub = jax.random.split(key)
-        em, acc, x, d, caches, cl = mtp_step(params, mtp, cfg, x, d, caches,
-                                             cl, sub)
-        accepts += int(np.sum(np.asarray(acc)))
-    emit("mtp", "smoke_acceptance_rate", round(accepts / (iters * 2), 2),
-         "untrained_draft_head (paper assumes 0.70 for a trained MTP module)")
-    emit("mtp", "smoke_tokens_per_iter", round(1 + accepts / (iters * 2), 2), "")
+
+
+def _one_serve(kw):
+    t0 = time.perf_counter()
+    results, scheduler = live_smoke_serve(
+        decode_batch=4, decode_chunk=MTP_CHUNK, max_new=MTP_MAX_NEW, **kw)
+    return time.perf_counter() - t0, results, scheduler
+
+
+def fused_rows() -> None:
+    """Measured acceptance + MTP speedup of the fused scanned path over the
+    decode_chunk-only fast path.
+
+    Two speedup rows, both against the identical request stream:
+
+    * **virtual** — trace-derived tokens per virtual second: each MTP
+      iteration is charged the paper's 1.44x verification cost while
+      crediting 1 + measured-acceptance tokens. Deterministic, and the
+      faithful projection of the memory-bound NPU regime the paper's MTP
+      win lives in (the repo's virtual clock exists precisely because CPU
+      smoke wall time is orders of magnitude off NPU latencies).
+    * **wall** — end-to-end wall clock, median over interleaved A/B pairs
+      (robust to the shared CI box drifting mid-run). At smoke scale decode
+      is op-dispatch-bound rather than memory-bound, so the wall margin is
+      structurally thin; recorded as measured.
+    """
+    live_mtp_params()        # distill the draft head up front (memoized)
+
+    modes = {"chunk": {}, "mtp": {"use_mtp": True, "mtp_fused": True}}
+    for kw in modes.values():
+        _one_serve(kw)                  # warm: compile both systems
+    walls = {"chunk": [], "mtp": []}
+    stats = {}
+    for _ in range(MTP_REPEATS):        # interleaved A/B pairs
+        for name, kw in modes.items():
+            w, results, scheduler = _one_serve(kw)
+            walls[name].append(w)
+            s = scheduler.summary()
+            stats[name] = {
+                "decode_tokens": sum(len(r.tokens) - 1 for r in results
+                                     if not r.shed),
+                "virtual_tput": s["decode_tokens"] / s["decode_virtual_s"],
+                "tpot_p50_ms": s["tpot_p50_s"] * 1e3,
+                "iters": sum(t.decode_iters
+                             for t in scheduler.tracker.finished),
+                "tokens": sum(t.decode_tokens
+                              for t in scheduler.tracker.finished),
+            }
+    # Acceptance straight from the trace: tokens credited per decode
+    # iteration minus the guaranteed base token.
+    accept_rate = (stats["mtp"]["tokens"] / stats["mtp"]["iters"] - 1
+                   if stats["mtp"]["iters"] else 0.0)
+    emit("mtp", "smoke_acceptance_rate", round(accept_rate, 2),
+         "draft head distilled on the serving distribution "
+         "(paper: 0.70 for the trained MTP module)")
+    emit("mtp", "smoke_tokens_per_iter", round(1 + accept_rate, 2), "")
+
+    tps = {name: stats[name]["decode_tokens"]
+           / sorted(ws)[len(ws) // 2] for name, ws in walls.items()}
+    vtps = {name: stats[name]["virtual_tput"] for name in modes}
+    for name in modes:
+        emit("mtp", f"fused_{name}_tokens_per_wall_s", round(tps[name], 1),
+             f"decode_chunk={MTP_CHUNK}")
+        emit("mtp", f"fused_{name}_tokens_per_virtual_s",
+             round(vtps[name], 1), "trace-derived (1.44x MTP iteration)")
+    wall_speedup = sorted(c / m for c, m in
+                          zip(walls["chunk"], walls["mtp"]))[MTP_REPEATS // 2]
+    virtual_speedup = vtps["mtp"] / vtps["chunk"]
+    emit("mtp", "mtp_speedup_vs_chunk_virtual", round(virtual_speedup, 3),
+         "(1+accept)/1.44 — the paper's memory-bound arithmetic, "
+         "measured acceptance")
+    emit("mtp", "mtp_speedup_vs_chunk_wall", round(wall_speedup, 2),
+         "median of interleaved A/B pair ratios")
+    path = update_bench_artifact("decode", {"mtp": {
+        "decode_chunk": MTP_CHUNK,
+        "max_new": MTP_MAX_NEW,
+        "acceptance_rate": accept_rate,
+        "tokens_per_iter": 1 + accept_rate,
+        "tokens_per_virtual_s": vtps["mtp"],
+        "baseline_chunk_tokens_per_virtual_s": vtps["chunk"],
+        "mtp_speedup_vs_chunk_virtual": virtual_speedup,
+        "tokens_per_wall_s": tps["mtp"],
+        "baseline_chunk_tokens_per_wall_s": tps["chunk"],
+        "mtp_speedup_vs_chunk_wall": wall_speedup,
+        "tpot_p50_ms": stats["mtp"]["tpot_p50_ms"],
+        "fused_verify": True,
+        "draft_head": "distilled",
+    }})
+    emit("mtp", "artifact", path, "")
+
+
+def main(smoke: bool = False) -> None:
+    print("name,metric,value,derived")
+    if not smoke:
+        roofline_rows()
+    fused_rows()
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fused-path live rows + BENCH_decode.json merge "
+                         "only (no dry-run-derived tables)")
+    main(smoke=ap.parse_args().smoke)

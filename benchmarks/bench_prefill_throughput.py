@@ -23,6 +23,7 @@ LIVE_PROMPT = 24
 LIVE_SHARED = 16
 LIVE_REQS = 6
 LIVE_REPEATS = 3
+FRESH_CHUNK = 8      # fresh-prompt chunked prefill width (bounded shapes)
 
 
 def main(smoke: bool = False) -> None:
@@ -48,8 +49,9 @@ def main(smoke: bool = False) -> None:
 
 def _live_rows() -> None:
     """Wall-clock prefill throughput of the live engine at smoke scale —
-    fresh prompts vs EMS prefix reuse (chunked suffix fast path) — persisted
-    to BENCH_prefill.json."""
+    fresh prompts vs EMS prefix reuse (chunked suffix fast path), plus the
+    bounded-compile-shape fresh-prompt chunked path with its compile-cache
+    hit rate — persisted to BENCH_prefill.json."""
     import numpy as np
 
     from benchmarks.common import LIVE_ARCH, live_model
@@ -78,15 +80,52 @@ def _live_rows() -> None:
     tput = (reused + computed) / wall
     emit("prefill_tput", "live_smoke_tokens_per_wall_s", round(tput, 1),
          f"reused={reused};computed={computed};wall_s={wall:.3f}")
+
+    # --- fresh long prompts through chunked prefill_continue ------------
+    # One compiled program per chunk width serves EVERY prompt length:
+    # varied lengths stop exploding the jit cache (bounded compile shapes).
+    eng_c = PrefillEngine(params, cfg, capacity=2 * LIVE_PROMPT + 8,
+                          prefill_chunk=FRESH_CHUNK)
+    fresh = [Request(100 + i,
+                     list(rng.randint(0, cfg.vocab_size,
+                                      LIVE_PROMPT + (i % 4))), 1)
+             for i in range(LIVE_REQS)]    # varied lengths on purpose
+    eng_c.run(fresh[0])                    # warm: compile the chunk program
+    t0 = time.perf_counter()
+    fresh_tokens = 0
+    for _ in range(LIVE_REPEATS):
+        for r in fresh:
+            _, _, res = eng_c.run(r)
+            fresh_tokens += res.computed_tokens
+    fresh_wall = time.perf_counter() - t0
+    fresh_tput = fresh_tokens / fresh_wall
+    hit = eng_c.continue_cache_hit_rate
+    emit("prefill_tput", "live_fresh_chunked_tokens_per_wall_s",
+         round(fresh_tput, 1),
+         f"chunk={FRESH_CHUNK};wall_s={fresh_wall:.3f}")
+    emit("prefill_tput", "live_fresh_chunked_compile_cache_hit",
+         round(hit, 3),
+         f"{len(eng_c.continue_widths)}_programs_over_"
+         f"{eng_c.continue_calls}_dispatches")
+
     artifact = {
         "config": {"arch": LIVE_ARCH, "prompt_len": LIVE_PROMPT,
                    "shared_prefix": LIVE_SHARED, "requests": LIVE_REQS,
                    "repeats": LIVE_REPEATS,
-                   "suffix_chunk": eng.suffix_chunk},
+                   "suffix_chunk": eng.suffix_chunk,
+                   "fresh_prefill_chunk": FRESH_CHUNK},
         "tokens_per_s": tput,
         "wall_s": wall,
         "reused_tokens": reused,
         "computed_tokens": computed,
+        "fresh_chunked": {
+            "tokens_per_s": fresh_tput,
+            "wall_s": fresh_wall,
+            "computed_tokens": fresh_tokens,
+            "compile_cache_hit_rate": hit,
+            "compiled_widths": sorted(eng_c.continue_widths),
+            "dispatches": eng_c.continue_calls,
+        },
         "tpot_p50_ms": None,               # prefill-side bench: no decode
         "tpot_p99_ms": None,
         "decode_chunk": None,

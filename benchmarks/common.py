@@ -64,15 +64,31 @@ def emit(name: str, metric: str, value, derived: str = "") -> None:
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def write_bench_artifact(name: str, payload: Dict) -> str:
+def write_bench_artifact(name: str, payload: Dict, schema: int = 2) -> str:
     """Persist a benchmark record as BENCH_<name>.json at the repo root so
-    the perf trajectory is trackable PR-over-PR."""
+    the perf trajectory is trackable PR-over-PR. Schema 2 adds the MTP
+    section (acceptance rate + speedup) to the decode artifact."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
-        json.dump({"schema": 1, "bench": name, **payload}, f, indent=1,
+        json.dump({"schema": schema, "bench": name, **payload}, f, indent=1,
                   sort_keys=True)
         f.write("\n")
     return path
+
+
+def update_bench_artifact(name: str, extra: Dict, schema: int = 2) -> str:
+    """Merge ``extra`` into an existing BENCH_<name>.json (or start a fresh
+    one) — benches that contribute sections to a shared artifact (bench_mtp
+    -> BENCH_decode.json) use this instead of clobbering it."""
+    path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    payload: Dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.update(extra)
+    payload.pop("schema", None)
+    payload.pop("bench", None)
+    return write_bench_artifact(name, payload, schema)
 
 
 # ---------------------------------------------------------------------------
@@ -144,15 +160,46 @@ def live_model():
     return _live_model
 
 
+_live_mtp_params = None
+
+
+def live_mtp_params():
+    """Draft-head params for the live smoke arch — distilled against the
+    base model's greedy continuations of the *live serving prompts*
+    (memoized), the smoke-scale analogue of the paper's trained MTP module
+    (train distribution == serve distribution), so live MTP rows measure a
+    realistic acceptance rate instead of chance."""
+    global _live_mtp_params
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import fit_draft_head, init_mtp_params
+
+    if _live_mtp_params is None:
+        cfg, params = live_model()
+        mtp = init_mtp_params(jax.random.PRNGKey(1), cfg)
+        rng = np.random.RandomState(0)          # == live_smoke_serve stream
+        prompts = jnp.asarray(
+            [rng.randint(0, cfg.vocab_size, LIVE_PROMPT_LEN)
+             for _ in range(LIVE_REQUESTS)], jnp.int32)
+        mtp = fit_draft_head(params, cfg, mtp, jax.random.PRNGKey(2),
+                             prompts=prompts, gen_len=32, steps=400)
+        _live_mtp_params = mtp
+    return _live_mtp_params
+
+
 def live_smoke_serve(*, decode_batch: int, tpot_budget_ms=None,
                      admission: str = "shed", decode_chunk: int = 1,
-                     max_new: int = LIVE_MAX_NEW):
+                     max_new: int = LIVE_MAX_NEW, use_mtp: bool = False,
+                     mtp_fused: bool = False):
     """Serve the canonical smoke request stream; returns (results,
     scheduler). The ServingSystem (and its jitted prefill/decode steps) is
-    cached per (decode_batch, decode_chunk) — only the scheduler, which
-    traces no computation, is rebuilt per sweep point. The decode cost
-    model is calibrated from the arch's dry-run roofline record when one
-    exists (placeholder defaults otherwise)."""
+    cached per (decode_batch, decode_chunk, mtp mode) — only the scheduler,
+    which traces no computation, is rebuilt per sweep point. The decode
+    cost model is calibrated from the arch's dry-run roofline record when
+    one exists (placeholder defaults otherwise); MTP runs use the distilled
+    draft head from :func:`live_mtp_params`."""
     import numpy as np
 
     from repro.serving import Request, SchedulerConfig, ServingSystem
@@ -161,17 +208,45 @@ def live_smoke_serve(*, decode_batch: int, tpot_budget_ms=None,
     rng = np.random.RandomState(0)
     reqs = [Request(i, list(rng.randint(0, cfg.vocab_size, LIVE_PROMPT_LEN)),
                     max_new) for i in range(LIVE_REQUESTS)]
-    key = (decode_batch, decode_chunk, max_new)
+    key = (decode_batch, decode_chunk, max_new, use_mtp, mtp_fused)
     system = _live_systems.get(key)
     if system is None:
         system = ServingSystem(
             params, cfg, n_prefill=2, decode_batch=decode_batch,
             capacity=LIVE_PROMPT_LEN + max_new + 16,
-            decode_chunk=decode_chunk)
+            decode_chunk=decode_chunk, use_mtp=use_mtp,
+            mtp_params=live_mtp_params() if use_mtp else None,
+            mtp_fused=mtp_fused)
         _live_systems[key] = system
     system.reconfigure_scheduler(
         SchedulerConfig(tpot_budget_ms=tpot_budget_ms, admission=admission,
-                        decode_chunk=decode_chunk,
+                        decode_chunk=decode_chunk, use_mtp=use_mtp,
                         decode_cost=calibrated_decode_cost(LIVE_ARCH)))
     results = system.serve(reqs)
+    return results, system.scheduler
+
+
+def live_poisson_serve(*, rate_rps: float, tpot_budget_ms=None,
+                       admission: str = "queue", n_requests: int = 16,
+                       decode_batch: int = 4, max_new: int = LIVE_MAX_NEW,
+                       seed: int = 0):
+    """Open-loop Poisson wave through the cached live system — the
+    admission gate under bursts. Returns (results, scheduler)."""
+    from repro.serving import SchedulerConfig, ServingSystem
+    from repro.serving.workload import poisson_requests
+
+    cfg, params = live_model()
+    reqs = poisson_requests(n_requests, rate_rps, LIVE_PROMPT_LEN, max_new,
+                            cfg.vocab_size, seed=seed)
+    key = (decode_batch, 1, max_new, False, False)
+    system = _live_systems.get(key)
+    if system is None:
+        system = ServingSystem(
+            params, cfg, n_prefill=2, decode_batch=decode_batch,
+            capacity=LIVE_PROMPT_LEN + max_new + 16)
+        _live_systems[key] = system
+    system.reconfigure_scheduler(
+        SchedulerConfig(tpot_budget_ms=tpot_budget_ms, admission=admission,
+                        decode_cost=calibrated_decode_cost(LIVE_ARCH)))
+    results = system.serve(reqs, open_loop=True)
     return results, system.scheduler

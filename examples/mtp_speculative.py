@@ -52,3 +52,28 @@ print("MTP greedy   :", got[:N_NEW], f"({iters} iterations, "
 assert got[:N_NEW] == ref, "speculative decoding must preserve greedy output"
 print(f"tokens/iteration: {len(got[:N_NEW])/iters:.2f} "
       f"(untrained draft head; paper's trained MTP reaches ~1.7)")
+
+# --- fused fast path: N scanned MTP iterations, one host sync ---------------
+from repro.models.model import decode_loop_mtp  # noqa: E402
+
+logits, caches = prefill(params, cfg, {"tokens": jnp.asarray([prompt])},
+                         capacity=64, cache_dtype=jnp.float32)
+x = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+d = propose_draft(params, mtp, cfg, x)
+# n_iters = N_NEW - 1 guarantees enough iterations to emit the full run
+# whatever the acceptance pattern; steps_left stops emission at N_NEW - 1.
+em, acc, lv, *_ = decode_loop_mtp(
+    params, mtp, cfg, x, d, caches, jnp.full((1,), len(prompt), jnp.int32),
+    n_iters=N_NEW - 1, key=jax.random.PRNGKey(2), fused_verify=True,
+    steps_left=jnp.full((1,), N_NEW - 1, jnp.int32))
+fused = [int(x[0])]
+for j in range(N_NEW - 1):
+    if not bool(lv[0, j]):
+        break
+    fused.append(int(em[0, j, 0]))
+    if bool(acc[0, j]) and len(fused) < N_NEW:
+        fused.append(int(em[0, j, 1]))
+print("fused scan   :", fused[:N_NEW],
+      "(decode_loop_mtp: draft+verify+sample+accept all on-device,"
+      " one host sync)")
+assert fused[:N_NEW] == ref

@@ -8,6 +8,13 @@
 """
 from repro.core.lep import make_lep_moe_fn, pick_lep_plan  # noqa: F401
 from repro.core.microbatch import microbatched, microbatched_loss  # noqa: F401
-from repro.core.mtp import init_mtp_params, mtp_step, propose_draft, sample_top_p  # noqa: F401
+from repro.core.mtp import (  # noqa: F401
+    can_fuse_verify,
+    fit_draft_head,
+    init_mtp_params,
+    mtp_step,
+    propose_draft,
+    sample_top_p,
+)
 from repro.core.hybrid_parallel import mla_prefill_hybrid  # noqa: F401
 from repro.core.parallel import constrain, mesh_context, set_current_mesh  # noqa: F401

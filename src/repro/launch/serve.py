@@ -1,10 +1,12 @@
 """Serving launcher: the full PDC pipeline on a batch of synthetic requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-      --n-requests 6 --prompt-len 24 --max-new 8 [--mtp] [--no-cache] \
+      --n-requests 6 --prompt-len 24 --max-new 8 \
+      [--mtp [--mtp-fused] [--fit-draft]] [--no-cache] \
       [--policy least_loaded|round_robin|queue_depth] \
       [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
-      [--decode-chunk 4] [--trace]
+      [--decode-chunk 4] [--prefill-chunk 32] \
+      [--poisson-rate 100 [--open-loop]] [--trace]
 """
 from __future__ import annotations
 
@@ -32,6 +34,13 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=16,
                     help="tokens shared across prompts (context-cache reuse)")
     ap.add_argument("--mtp", action="store_true")
+    ap.add_argument("--mtp-fused", action="store_true",
+                    help="verify base+draft in one fused two-token forward "
+                         "(one weight stream per MTP iteration)")
+    ap.add_argument("--fit-draft", action="store_true",
+                    help="distill the draft head on the model's own greedy "
+                         "continuations before serving (realistic MTP "
+                         "acceptance at smoke scale)")
     ap.add_argument("--no-cache", action="store_true")
     ap.add_argument("--decode-batch", type=int, default=4)
     ap.add_argument("--policy", default="least_loaded",
@@ -45,7 +54,17 @@ def main() -> None:
                     help="pair two decode microbatches per step (§4.2.3)")
     ap.add_argument("--decode-chunk", type=int, default=1,
                     help="decode iterations per host sync (scanned "
-                         "device-resident decode fast path)")
+                         "device-resident decode fast path; with --mtp each "
+                         "iteration speculates, so up to 2x tokens)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="run fresh prompts through chunked prefill_continue "
+                         "calls of this width (bounded compile shapes)")
+    ap.add_argument("--poisson-rate", type=float, default=None,
+                    help="generate Poisson arrivals at this rate (virtual "
+                         "req/s) and serve open-loop")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="arrival-time-driven serving on the virtual clock "
+                         "(implied by --poisson-rate)")
     ap.add_argument("--trace", action="store_true",
                     help="dump the structured per-request trace as JSON")
     args = ap.parse_args()
@@ -60,22 +79,42 @@ def main() -> None:
 
     rng = np.random.RandomState(0)
     shared = min(args.shared_prefix, args.prompt_len - 1)
-    prefix = list(rng.randint(0, cfg.vocab_size, shared))
-    reqs = [Request(i, prefix + list(rng.randint(0, cfg.vocab_size,
-                                                 args.prompt_len - shared)),
-                    args.max_new) for i in range(args.n_requests)]
+    open_loop = args.open_loop or args.poisson_rate is not None
+    if args.poisson_rate is not None:
+        from repro.serving import poisson_requests
+        reqs = poisson_requests(args.n_requests, args.poisson_rate,
+                                args.prompt_len, args.max_new,
+                                cfg.vocab_size, shared_prefix=shared)
+    else:
+        prefix = list(rng.randint(0, cfg.vocab_size, shared))
+        reqs = [Request(i, prefix + list(rng.randint(0, cfg.vocab_size,
+                                                     args.prompt_len - shared)),
+                        args.max_new) for i in range(args.n_requests)]
+
+    if args.mtp and args.fit_draft:
+        # Distill on the prompts actually served: a random base model's
+        # successor map is context-specific, so this is the only
+        # distribution the head can meaningfully accept on (the trained-MTP
+        # analogue of matching train and serve distributions).
+        from repro.core import fit_draft_head
+        mtp_params = fit_draft_head(
+            params, cfg, mtp_params, jax.random.PRNGKey(2),
+            prompts=np.asarray([r.prompt for r in reqs], np.int32),
+            gen_len=max(16, 2 * args.max_new))
 
     system = ServingSystem(params, cfg, n_prefill=2,
                            decode_batch=args.decode_batch,
                            capacity=args.prompt_len + args.max_new + 8,
                            context_cache=cc, use_mtp=args.mtp,
-                           mtp_params=mtp_params, policy=args.policy,
+                           mtp_params=mtp_params, mtp_fused=args.mtp_fused,
+                           policy=args.policy,
                            tpot_budget_ms=args.tpot_budget_ms,
                            admission=args.admission,
                            interleave=args.interleave,
-                           decode_chunk=args.decode_chunk)
+                           decode_chunk=args.decode_chunk,
+                           prefill_chunk=args.prefill_chunk)
     t0 = time.time()
-    results = system.serve(reqs)
+    results = system.serve(reqs, open_loop=open_loop)
     dt = time.time() - t0
     total_new = sum(len(r.tokens) for r in results if not r.shed)
     for r in sorted(results, key=lambda r: r.rid):
@@ -89,6 +128,11 @@ def main() -> None:
     print("SLO summary (virtual clock): "
           + ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in summary.items()))
+    if args.prefill_chunk:
+        calls = sum(e.continue_calls for e in system.prefills)
+        widths = set().union(*(e.continue_widths for e in system.prefills))
+        print(f"chunked prefill: {calls} dispatches over {len(widths)} "
+              f"compiled widths {sorted(widths)}")
     if cc is not None:
         print("pool:", cc.pool.stats())
     print("transfer:", system.transfer.transfers, "handoffs,",

@@ -2,6 +2,7 @@ from repro.models.model import (  # noqa: F401
     build_plan,
     cache_batch_axes,
     decode_loop,
+    decode_loop_mtp,
     decode_step,
     forward,
     init_params,

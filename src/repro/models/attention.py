@@ -275,26 +275,40 @@ def attention_extend(
     x: jax.Array,                 # (B, S, D) — teacher-forced new tokens
     cache_k: jax.Array,           # (B, cap, KV, hd), first `offset` valid
     cache_v: jax.Array,
-    offset: jax.Array,            # scalar int32 (traced)
+    offset: jax.Array,            # int32: scalar or per-request (B,) (traced)
     cfg: ModelConfig,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Multi-token cached attention: process S known tokens at positions
     ``offset .. offset+S-1`` in one shot — the batched generalization of
     :func:`attention_decode` (S=1) used by the chunked suffix-prefill fast
-    path. No ring-buffer support (the EMS reuse path never sees rings).
+    path. A per-request ``offset`` (B,) supports divergent sequence lengths
+    within one batch — the MTP fused base+draft verification forward (paper
+    §4.2.2 issue 3). No ring-buffer support (neither the EMS reuse path nor
+    MTP verification ever sees rings).
 
     Returns (out (B,S,D), new_cache_k, new_cache_v)."""
     b, s, _ = x.shape
     cap = cache_k.shape[1]
-    q_pos = offset + jnp.arange(s, dtype=jnp.int32)
-    positions = jnp.broadcast_to(q_pos[None], (b, s))
-    q, k_new, v_new = _project_qkv(p, x, cfg, positions)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k_new.astype(cache_k.dtype), offset, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v_new.astype(cache_v.dtype), offset, axis=1)
-    kv_idx = jnp.arange(cap, dtype=jnp.int32)
-    mask = (kv_idx[None, :] <= q_pos[:, None])[None]        # (1, S, cap)
+    offset = jnp.asarray(offset, jnp.int32)
+    if offset.ndim == 0:
+        q_pos = offset + jnp.arange(s, dtype=jnp.int32)     # (S,)
+        positions = jnp.broadcast_to(q_pos[None], (b, s))
+        q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), offset, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), offset, axis=1)
+        kv_idx = jnp.arange(cap, dtype=jnp.int32)
+        mask = (kv_idx[None, :] <= q_pos[:, None])[None]    # (1, S, cap)
+    else:
+        positions = offset[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+        q, k_new, v_new = _project_qkv(p, x, cfg, positions)
+        rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+        # Out-of-bounds scatter rows are dropped (masked callers rely on it).
+        cache_k = cache_k.at[rows, positions].set(k_new.astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, positions].set(v_new.astype(cache_v.dtype))
+        kv_idx = jnp.arange(cap, dtype=jnp.int32)
+        mask = kv_idx[None, None, :] <= positions[:, :, None]   # (B, S, cap)
     out = _sdpa(q, cache_k, cache_v, mask)
     out = jnp.einsum("bse,ed->bsd", out, p["wo"])
     return out, cache_k, cache_v

@@ -224,20 +224,30 @@ def mla_extend(p: dict, x: jax.Array, cache: jax.Array, offset: jax.Array,
     generalization of :func:`mla_decode` used by chunked suffix prefill.
 
     x: (B, S, D) at positions ``offset .. offset+S-1``; cache:
-    (B, cap, kvr+rope) with the first ``offset`` rows valid. Returns
-    (out (B,S,D), new cache)."""
+    (B, cap, kvr+rope) with the first ``offset`` rows valid. ``offset`` may
+    be per-request (B,) — divergent in-batch lengths for the MTP fused
+    verification forward. Returns (out (B,S,D), new cache)."""
     b, s, _ = x.shape
     h = cfg.num_heads
     nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
     cap = cache.shape[1]
-    q_pos = offset + jnp.arange(s, dtype=jnp.int32)
-    positions = jnp.broadcast_to(q_pos[None], (b, s))
+    offset = jnp.asarray(offset, jnp.int32)
+    if offset.ndim == 0:
+        q_pos = offset + jnp.arange(s, dtype=jnp.int32)      # (S,)
+        positions = jnp.broadcast_to(q_pos[None], (b, s))
+    else:
+        positions = offset[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
     q_nope, q_rope, c_kv, k_rope = _mla_qkv_latent(p, x, cfg, positions)
 
     new_entry = jnp.concatenate([c_kv, k_rope], axis=-1)     # (B,S,kvr+rope)
-    cache = jax.lax.dynamic_update_slice_in_dim(
-        cache, new_entry.astype(cache.dtype), offset, axis=1)
+    if offset.ndim == 0:
+        cache = jax.lax.dynamic_update_slice_in_dim(
+            cache, new_entry.astype(cache.dtype), offset, axis=1)
+    else:
+        rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+        # Out-of-bounds scatter rows are dropped (masked callers rely on it).
+        cache = cache.at[rows, positions].set(new_entry.astype(cache.dtype))
 
     wk = p["wk_b"].reshape(kvr, h, nope)
     q_lat = jnp.einsum("bshe,rhe->bshr", q_nope.astype(jnp.float32),
@@ -250,8 +260,8 @@ def mla_extend(p: dict, x: jax.Array, cache: jax.Array, offset: jax.Array,
         + jnp.einsum("bshe,bte->bhst", q_rope.astype(jnp.float32), kr)
     ) * scale
     kv_idx = jnp.arange(cap, dtype=jnp.int32)
-    mask = kv_idx[None, :] <= q_pos[:, None]                 # (S, cap)
-    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    mask = kv_idx[None, None, :] <= positions[:, :, None]    # (B, S, cap)
+    scores = jnp.where(mask[:, None], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", probs, ck)          # (B,S,H,kvr)
     wv = p["wv_b"].reshape(kvr, h, vd)

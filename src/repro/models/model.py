@@ -11,11 +11,15 @@ Families → segment plans:
   hybrid (zamba2)     : [mamba groups of ``attn_every`` + one *shared* attention
                          block applied after each group] + [mamba tail]
 
-Five entry points: ``forward`` (full-sequence, training), ``prefill``
+Six entry points: ``forward`` (full-sequence, training), ``prefill``
 (full-sequence + cache materialization), ``decode_step`` (one token),
 ``decode_loop`` (N scanned decode steps with on-device greedy sampling —
-the serving fast path), and ``prefill_continue`` (teacher-forced suffix
-continuation against an existing cache, the EMS-reuse fast path).
+the serving fast path), ``decode_loop_mtp`` (N scanned MTP speculative
+iterations with on-device accept/reject — up to 2N tokens per host sync),
+and ``prefill_continue`` (teacher-forced continuation against an existing
+cache: the EMS-reuse suffix path, the bounded-shape fresh-prefill chunk
+step, and — with per-request offsets — the MTP fused verification
+forward).
 MoE execution is pluggable via ``moe_fn`` — default is the single-device
 capacity implementation; ``core/lep.py`` supplies the shard_map LEP version.
 """
@@ -533,6 +537,17 @@ def decode_ready_caches(params: dict, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 
+def _masked_select(mask: jax.Array, new: jax.Array, old: jax.Array,
+                   ax, b: int) -> jax.Array:
+    """Per-slot freeze: keep ``old`` where ``mask`` is False along the batch
+    axis ``ax`` (None = unbatched bookkeeping leaf, always take ``new``)."""
+    if ax is None:
+        return new
+    shape = [1] * new.ndim
+    shape[ax] = b
+    return jnp.where(mask.reshape(shape), new, old)
+
+
 def decode_loop(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 caches: Dict[str, Any], cache_len: jax.Array, n_steps: int,
                 *, steps_left: Optional[jax.Array] = None,
@@ -577,11 +592,7 @@ def decode_loop(params: dict, cfg: ModelConfig, tokens: jax.Array,
                                  step_fn=step_fn)
 
     def _select(mask, new, old, ax):
-        if ax is None:
-            return new
-        shape = [1] * new.ndim
-        shape[ax] = b
-        return jnp.where(mask.reshape(shape), new, old)
+        return _masked_select(mask, new, old, ax, b)
 
     def body(carry, _):
         tok, cl, left, cs = carry
@@ -604,8 +615,100 @@ def decode_loop(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Scanned MTP speculative decode (device-resident fast path, paper §4.2.4)
+# ---------------------------------------------------------------------------
+
+
+def decode_loop_mtp(params: dict, mtp: dict, cfg: ModelConfig,
+                    tokens: jax.Array, drafts: jax.Array,
+                    caches: Dict[str, Any], cache_len: jax.Array,
+                    n_iters: int, *,
+                    steps_left: Optional[jax.Array] = None,
+                    key: Optional[jax.Array] = None,
+                    greedy: bool = True, fused_verify: bool = False,
+                    moe_fn: Optional[MoeFn] = None
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                               jax.Array, Dict[str, Any], jax.Array]:
+    """``n_iters`` MTP iterations in one ``lax.scan`` — up to ``2*n_iters``
+    tokens per host sync with speculation, sampling, accept/reject, and
+    cache bookkeeping all on-device (the §4.2.4 decode headline composed
+    with the PR 2 chunked-decode fast path).
+
+    Each iteration runs one :func:`repro.core.mtp.mtp_step`: base + draft
+    verification forwards (or ONE fused two-token teacher-forced forward
+    when ``fused_verify`` — see :func:`repro.core.mtp.can_fuse_verify`),
+    in-graph sampling, per-slot accept/reject, and the next draft proposal.
+    Accepted iterations advance ``cache_len`` by 2, rejected by 1 (the
+    stale speculative KV slot is overwritten by the next live iteration's
+    base write), so effective sequence lengths diverge within the batch.
+
+    Per-slot masking composes with the chunked-decode rules: a slot is live
+    while it still wants tokens (``steps_left > 0``) and both KV writes fit
+    (``cache_len + 2 <= capacity``); frozen slots hold their token, draft,
+    cache content, and ``cache_len`` bit-exactly.
+
+    tokens/drafts: (B,) int32 — last committed token and its proposed
+    successor (:func:`repro.core.mtp.propose_draft`). steps_left: (B,)
+    tokens each slot still wants (defaults to ``2*n_iters``). Returns
+    ``(emitted (B, n_iters, 2), accepted (B, n_iters), live (B, n_iters),
+    tokens, drafts, caches, cache_len)``; row ``emitted[:, j]`` is
+    meaningful only where ``live[:, j]``, and ``emitted[:, j, 1]`` only
+    where additionally ``accepted[:, j]``.
+    """
+    from repro.core import mtp as mtp_mod  # deferred: core.mtp imports us
+
+    if tokens.ndim != 1:
+        raise ValueError(f"decode_loop_mtp wants tokens of shape (B,), "
+                         f"got {tokens.shape}")
+    b = tokens.shape[0]
+    cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
+    if steps_left is None:
+        steps_left = jnp.full((b,), 2 * n_iters, jnp.int32)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    cap = _cache_capacity(cfg, caches)
+    axes = cache_batch_axes(cfg)
+    caches = decode_ready_caches(params, cfg, caches, cache_len, moe_fn)
+
+    def body(carry, _):
+        tok, drf, cl, left, k, cs = carry
+        live = left > 0
+        if cap is not None:
+            live &= cl + 2 <= cap       # base + speculative writes must fit
+        k, sub = jax.random.split(k)
+        em, acc, x_next, d_next, ncs, new_len = mtp_mod.mtp_step(
+            params, mtp, cfg, tok, drf, cs, cl, sub, moe_fn, greedy,
+            fused_verify)
+        acc &= live
+        tok = jnp.where(live, x_next, tok)
+        drf = jnp.where(live, d_next, drf)
+        cl = jnp.where(live, new_len, cl)
+        left = left - jnp.where(live, 1 + acc.astype(jnp.int32), 0)
+        ncs = jax.tree.map(
+            lambda n, o, ax: _masked_select(live, n, o, ax, b), ncs, cs, axes)
+        ncs = _with_lengths(cfg, ncs, cl)
+        return (tok, drf, cl, left, k, ncs), (em, acc, live)
+
+    (tokens, drafts, cache_len, _, _, caches), (em, acc, lv) = jax.lax.scan(
+        body, (tokens, drafts, cache_len, steps_left, key, caches), None,
+        length=n_iters)
+    return (jnp.moveaxis(em, 0, 1), acc.T, lv.T, tokens, drafts, caches,
+            cache_len)
+
+
+# ---------------------------------------------------------------------------
 # Chunked suffix prefill (teacher-forced continuation, EMS-reuse fast path)
 # ---------------------------------------------------------------------------
+
+
+def supports_prefill_continue(cfg: ModelConfig, capacity: int) -> bool:
+    """Static eligibility for :func:`prefill_continue` (and everything
+    built on it: chunked suffix/fresh prefill, the MTP fused verification):
+    a token-addressable, non-ring cache."""
+    return (cfg.attention_kind in ("causal", "mla")
+            and not cfg.is_ssm and not cfg.is_hybrid
+            and not attn_mod.is_ring(cfg, capacity))
 
 
 def prefill_continue(params: dict, cfg: ModelConfig, tokens: jax.Array,
@@ -616,7 +719,10 @@ def prefill_continue(params: dict, cfg: ModelConfig, tokens: jax.Array,
     ``offset .. offset+S-1`` against caches whose first ``offset`` positions
     are valid — the whole suffix in ONE call instead of S ``decode_step``
     round-trips. Also serves as the long-prompt chunk step (advance
-    ``offset`` between calls). Returns (logits (B, S, V), new caches).
+    ``offset`` between calls; with ``offset=0`` on a fresh cache this IS a
+    bounded-shape prefill chunk) and, with a per-request ``offset`` (B,),
+    as the MTP fused base+draft verification forward (divergent in-batch
+    lengths). Returns (logits (B, S, V), new caches).
 
     Attention/MLA archs only: SSM state is not token-addressable. Callers
     must not pass *wrapped* ring caches (serving gates this path on

@@ -23,6 +23,7 @@ from repro.serving.scheduler import (  # noqa: F401
     decode_cost_from_roofline,
     make_router,
 )
+from repro.serving.workload import poisson_requests  # noqa: F401
 from repro.serving.transfer import (  # noqa: F401
     KVTransferEngine,
     connection_map,

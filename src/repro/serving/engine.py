@@ -32,7 +32,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import mtp as mtp_mod
 from repro.mempool.context_cache import ContextCache
-from repro.models import attention as attn_mod
 from repro.models import model as model_mod
 from repro.serving import cache_ops
 from repro.serving.scheduler import (
@@ -79,12 +78,24 @@ class PrefillEngine:
     def __init__(self, params, cfg: ModelConfig, capacity: int,
                  context_cache: Optional[ContextCache] = None,
                  instance_id: int = 0, moe_fn=None,
-                 suffix_chunk: Optional[int] = None):
+                 suffix_chunk: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         self.params, self.cfg, self.capacity = params, cfg, capacity
         self.cc = context_cache
         self.instance_id = instance_id
         self.load = 0  # in-flight prompt tokens (scheduler signal)
         self.suffix_chunk = suffix_chunk or self.SUFFIX_CHUNK
+        # Fresh prompts, when set, run through chunked prefill_continue
+        # calls of this width (offset 0 on a fresh cache == prefill): one
+        # compiled program per width instead of one per prompt length.
+        # Fresh-path and EMS-suffix dispatches are counted separately so
+        # the compile-cache hit rate reflects one chunk configuration.
+        self.prefill_chunk = prefill_chunk
+        self.continue_calls = 0            # fresh-path dispatches
+        self.continue_widths: set = set()  # fresh-path compiled widths
+        self.suffix_calls = 0              # EMS-suffix dispatches
+        self.suffix_widths: set = set()
+        self._chunkable = model_mod.supports_prefill_continue(cfg, capacity)
         self._prefill = jax.jit(
             lambda p, b: model_mod.prefill(p, cfg, b, capacity, moe_fn,
                                            cache_dtype=jnp.float32))
@@ -101,6 +112,46 @@ class PrefillEngine:
 
     def _fresh_cache(self):
         return model_mod.make_caches(self.cfg, 1, self.capacity, jnp.float32)
+
+    @property
+    def continue_cache_hit_rate(self) -> float:
+        """Fraction of fresh-path chunked-prefill dispatches that reuse an
+        already compiled program (1 - distinct widths / calls)."""
+        if not self.continue_calls:
+            return float("nan")
+        return 1.0 - len(self.continue_widths) / self.continue_calls
+
+    def _continue_chunks(self, tokens, caches, pos: int, chunk: int,
+                         fresh: bool):
+        """Feed ``tokens`` at positions ``pos..`` through jitted
+        prefill_continue calls of bounded width ``chunk`` (tail padded, so
+        one program serves every length). Returns (last_logits_row, caches,
+        end_pos); padded positions land beyond the final cache_len, so
+        decode overwrites them before they are ever attendable."""
+        if pos + len(tokens) > self.capacity:
+            raise ValueError(
+                f"prompt run of {len(tokens)} tokens at offset {pos} "
+                f"exceeds the prefill cache capacity {self.capacity}")
+        st, last = 0, None
+        while st < len(tokens):
+            # Call width: the chunk, clamped to the cache headroom so the
+            # padded write never overruns the static capacity buffer.
+            width = min(chunk, self.capacity - pos)
+            part = tokens[st:st + width]
+            toks = jnp.asarray([list(part) + [0] * (width - len(part))],
+                               jnp.int32)
+            if fresh:
+                self.continue_calls += 1
+                self.continue_widths.add(width)
+            else:
+                self.suffix_calls += 1
+                self.suffix_widths.add(width)
+            logits, caches = self._continue(self.params, toks, caches,
+                                            jnp.int32(pos))
+            pos += len(part)
+            st += len(part)
+            last = logits[0, len(part) - 1]
+        return last, caches, pos
 
     def run(self, req: Request) -> Tuple[int, Any, RequestResult]:
         """Process one prompt. Returns (first_token, caches(B=1), result)."""
@@ -131,7 +182,7 @@ class PrefillEngine:
                 # whole suffix runs in chunked prefill_continue calls — one
                 # jitted dispatch per SUFFIX_CHUNK tokens instead of one per
                 # token (ring-buffer caches fall back to the token loop).
-                if attn_mod.is_ring(cfg, self.capacity):
+                if not self._chunkable:
                     logits = None
                     cl = jnp.int32(reuse_len)
                     for tok in prompt[reuse_len:]:
@@ -140,26 +191,22 @@ class PrefillEngine:
                         cl = cl + 1
                     last = logits[0]
                 else:
-                    rest = prompt[reuse_len:]
-                    ch, pos, st, last = self.suffix_chunk, reuse_len, 0, None
-                    while st < len(rest):
-                        # Call width: the suffix chunk, clamped to the cache
-                        # headroom so the padded write never overruns the
-                        # static capacity buffer.
-                        width = min(ch, self.capacity - pos)
-                        part = rest[st:st + width]
-                        # Pad the tail chunk; padded positions land beyond
-                        # the prompt's cache_len, so decode overwrites them
-                        # before they are ever attendable.
-                        toks = jnp.asarray([part + [0] * (width - len(part))],
-                                           jnp.int32)
-                        logits, caches = self._continue(
-                            self.params, toks, caches, jnp.int32(pos))
-                        pos += len(part)
-                        st += len(part)
-                        last = logits[0, len(part) - 1]
+                    last, caches, _ = self._continue_chunks(
+                        prompt[reuse_len:], caches, reuse_len,
+                        self.suffix_chunk, fresh=False)
                 first = int(jnp.argmax(last))
                 res.computed_tokens = len(prompt) - reuse_len
+            elif self.prefill_chunk and self._chunkable:
+                # Fresh prompt, bounded compile shapes: the whole prompt
+                # runs through chunked prefill_continue calls against a
+                # fresh cache (offset 0) — one compiled program per chunk
+                # width instead of one per prompt length, so long/varied
+                # prompts stop exploding the jit cache.
+                caches = self._fresh_cache()
+                last, caches, _ = self._continue_chunks(
+                    prompt, caches, 0, self.prefill_chunk, fresh=True)
+                first = int(jnp.argmax(last))
+                res.computed_tokens = len(prompt)
             else:
                 batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
                 logits, caches = self._prefill(self.params, batch)
@@ -197,17 +244,18 @@ class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, max_batch: int, capacity: int,
                  moe_fn=None, use_mtp: bool = False, mtp_params=None, seed=0,
                  interleave: bool = False, n_micro: int = 2,
-                 decode_chunk: int = 1):
+                 decode_chunk: int = 1, mtp_fused: bool = False):
         self.params, self.cfg = params, cfg
         self.b, self.capacity = max_batch, capacity
         self.use_mtp = use_mtp
         self.mtp_params = mtp_params
         self.decode_chunk = max(1, int(decode_chunk))
-        if use_mtp and self.decode_chunk > 1:
-            warnings.warn("decode_chunk > 1 is not compatible with MTP "
-                          "speculative decoding; falling back to per-step "
-                          "decode", stacklevel=2)
-            self.decode_chunk = 1
+        self.mtp_fused = bool(mtp_fused) and use_mtp
+        if self.mtp_fused and not mtp_mod.can_fuse_verify(cfg, capacity):
+            warnings.warn("fused MTP verification needs a causal/MLA "
+                          "non-ring cache; falling back to the two-forward "
+                          "verify", stacklevel=2)
+            self.mtp_fused = False
         self.caches = model_mod.make_caches(cfg, max_batch, capacity, jnp.float32)
         self.cache_len = jnp.zeros((max_batch,), jnp.int32)
         # Shape/dtype fixed point up front: donated cache buffers then alias
@@ -256,12 +304,23 @@ class DecodeEngine:
                                          steps_left=left, step_fn=fn)
 
         self._loop = jax.jit(_loop, donate_argnums=(2,)) \
-            if self.decode_chunk > 1 else None
+            if self.decode_chunk > 1 and not use_mtp else None
         if use_mtp:
+            self._propose = jax.jit(
+                lambda p, mp, t: mtp_mod.propose_draft(p, mp, cfg, t))
             self._mtp_step = jax.jit(
                 lambda p, mp, x, d, c, l, k: mtp_mod.mtp_step(
-                    p, mp, cfg, x, d, c, l, k, moe_fn),
+                    p, mp, cfg, x, d, c, l, k, moe_fn,
+                    fused_verify=self.mtp_fused),
                 donate_argnums=(4,))
+            # Scanned MTP fast path: decode_chunk speculative iterations
+            # (up to 2*decode_chunk tokens) per host sync, cache donated.
+            self._loop_mtp = jax.jit(
+                lambda p, mp, x, d, c, l, left, k: model_mod.decode_loop_mtp(
+                    p, mp, cfg, x, d, c, l, self.decode_chunk,
+                    steps_left=left, key=k, greedy=True,
+                    fused_verify=self.mtp_fused, moe_fn=moe_fn),
+                donate_argnums=(4,)) if self.decode_chunk > 1 else None
 
     def free_slot(self) -> Optional[int]:
         return self.slot_mgr.free_slot()
@@ -276,9 +335,9 @@ class DecodeEngine:
         self.cur_tok = self.cur_tok.at[slot].set(first_token)
         result.tokens.append(first_token)
         if self.use_mtp:
-            d = mtp_mod.propose_draft(self.params, self.mtp_params, self.cfg,
-                                      self.cur_tok[slot: slot + 1])
-            self.draft_tok = self.draft_tok.at[slot].set(int(d[0]))
+            d = self._propose(self.params, self.mtp_params,
+                              self.cur_tok[slot: slot + 1])
+            self.draft_tok = self.draft_tok.at[slot].set(d[0])
 
     @property
     def active(self) -> int:
@@ -289,17 +348,21 @@ class DecodeEngine:
         return self.step_chunk()[0]
 
     def step_chunk(self) -> Tuple[List[RequestResult],
-                                  List[Tuple[List[int], List[int]]]]:
+                                  List[Tuple[List[int], List[int],
+                                             dict]]]:
         """One host-sync decode turn: ``decode_chunk`` device iterations per
         jitted call on the fast path (one otherwise).
 
         Returns ``(finished, iter_log)``; ``iter_log`` holds one
-        ``(active_rids, finished_rids)`` entry per device iteration actually
-        occupied, so the scheduler can attribute virtual-clock time
-        per-iteration even when many iterations share a single host sync.
+        ``(active_rids, finished_rids, tokens_by_rid)`` entry per device
+        iteration actually occupied, so the scheduler can attribute
+        virtual-clock time per-iteration — and credit the tokens each
+        iteration committed (MTP: 1+accepted) — even when many iterations
+        share a single host sync.
         """
-        if self.decode_chunk > 1 and not self.use_mtp:
-            return self._step_chunked()
+        if self.decode_chunk > 1:
+            return (self._step_chunked_mtp() if self.use_mtp
+                    else self._step_chunked())
 
         self.iters += 1
         active_rids = [info.rid for _, info in self.slot_mgr.active_slots()]
@@ -321,6 +384,7 @@ class DecodeEngine:
             acc = np.zeros(self.b, bool)
 
         finished = []
+        tokens_by_rid: dict = {}
         for i, info in list(self.slot_mgr.active_slots()):
             slot: _Slot = info.payload
             slot.result.decode_iters += 1
@@ -330,17 +394,21 @@ class DecodeEngine:
             new_toks = [int(em[i, 0])]
             if self.use_mtp and acc[i] and slot.remaining > 1:
                 new_toks.append(int(em[i, 1]))
+            committed = 0
             for t in new_toks:
                 if slot.remaining > 0:
                     slot.result.tokens.append(t)
                     slot.remaining -= 1
+                    committed += 1
+            tokens_by_rid[info.rid] = committed
             if slot.remaining <= 0:
                 finished.append(slot.result)
                 self.slot_mgr.release(i)
-        return finished, [(active_rids, [r.rid for r in finished])]
+        return finished, [(active_rids, [r.rid for r in finished],
+                           tokens_by_rid)]
 
     def _step_chunked(self) -> Tuple[List[RequestResult],
-                                     List[Tuple[List[int], List[int]]]]:
+                                     List[Tuple[List[int], List[int], dict]]]:
         """Device-resident fast path: decode_chunk scanned iterations, one
         host sync. Slot accounting is reconciled in DecodeSlotManager.advance
         as the chunk drains, iteration by iteration."""
@@ -354,7 +422,7 @@ class DecodeEngine:
         lv = np.asarray(live)
 
         finished: List[RequestResult] = []
-        iter_log: List[Tuple[List[int], List[int]]] = []
+        iter_log: List[Tuple[List[int], List[int], dict]] = []
         for j in range(self.decode_chunk):
             active_rids = [info.rid for _, info
                            in self.slot_mgr.active_slots()]
@@ -362,6 +430,7 @@ class DecodeEngine:
                 break           # chunk drained early: nothing left to charge
             self.iters += 1
             fin_this: List[RequestResult] = []
+            tokens_by_rid: dict = {}
             for i, info in list(self.slot_mgr.active_slots()):
                 if not lv[i, j]:
                     continue
@@ -370,22 +439,83 @@ class DecodeEngine:
                 self.slot_mgr.advance(i, 1)
                 slot.result.tokens.append(int(em[i, j]))
                 slot.remaining -= 1
+                tokens_by_rid[info.rid] = 1
                 if slot.remaining <= 0:
                     fin_this.append(slot.result)
                     self.slot_mgr.release(i)
-            iter_log.append((active_rids, [r.rid for r in fin_this]))
+            iter_log.append((active_rids, [r.rid for r in fin_this],
+                             tokens_by_rid))
             finished.extend(fin_this)
-        # Enforce the capacity invariant the masked device loop would
-        # otherwise hide: a slot that still wants tokens but was never live
-        # this chunk is capacity-frozen — fail fast like per-step decode
-        # does via DecodeSlotManager.advance, instead of livelocking.
+        self._raise_if_capacity_frozen(lv)
+        return finished, iter_log
+
+    def _step_chunked_mtp(self) -> Tuple[List[RequestResult],
+                                         List[Tuple[List[int], List[int],
+                                                    dict]]]:
+        """Scanned MTP fast path: ``decode_chunk`` speculative iterations —
+        up to ``2*decode_chunk`` tokens — per host sync. Per-iteration
+        accept/reject ran on-device; here the emitted runs are committed
+        slot by slot, mirroring the per-step MTP accounting (advance 2 on
+        accept, credit the accepted draft token only while the request
+        still wants tokens)."""
+        left = np.zeros((self.b,), np.int32)
+        for i, info in self.slot_mgr.active_slots():
+            left[i] = info.payload.remaining
+        self.key, sub = jax.random.split(self.key)
+        (emitted, accepted, live, self.cur_tok, self.draft_tok, self.caches,
+         self.cache_len) = self._loop_mtp(
+            self.params, self.mtp_params, self.cur_tok, self.draft_tok,
+            self.caches, self.cache_len, jnp.asarray(left), sub)
+        em = np.asarray(emitted)        # (B, chunk, 2)
+        acc = np.asarray(accepted)      # (B, chunk)
+        lv = np.asarray(live)           # (B, chunk)
+
+        finished: List[RequestResult] = []
+        iter_log: List[Tuple[List[int], List[int], dict]] = []
+        for j in range(self.decode_chunk):
+            active_rids = [info.rid for _, info
+                           in self.slot_mgr.active_slots()]
+            if not active_rids:
+                break           # chunk drained early: nothing left to charge
+            self.iters += 1
+            fin_this: List[RequestResult] = []
+            tokens_by_rid: dict = {}
+            for i, info in list(self.slot_mgr.active_slots()):
+                if not lv[i, j]:
+                    continue
+                slot: _Slot = info.payload
+                slot.result.decode_iters += 1
+                self.slot_mgr.advance(i, 2 if acc[i, j] else 1)
+                new_toks = [int(em[i, j, 0])]
+                if acc[i, j] and slot.remaining > 1:
+                    new_toks.append(int(em[i, j, 1]))
+                committed = 0
+                for t in new_toks:
+                    if slot.remaining > 0:
+                        slot.result.tokens.append(t)
+                        slot.remaining -= 1
+                        committed += 1
+                tokens_by_rid[info.rid] = committed
+                if slot.remaining <= 0:
+                    fin_this.append(slot.result)
+                    self.slot_mgr.release(i)
+            iter_log.append((active_rids, [r.rid for r in fin_this],
+                             tokens_by_rid))
+            finished.extend(fin_this)
+        self._raise_if_capacity_frozen(lv)
+        return finished, iter_log
+
+    def _raise_if_capacity_frozen(self, lv: np.ndarray) -> None:
+        """Enforce the capacity invariant the masked device loop would
+        otherwise hide: a slot that still wants tokens but was never live
+        this chunk is capacity-frozen — fail fast like per-step decode
+        does via DecodeSlotManager.advance, instead of livelocking."""
         for i, info in list(self.slot_mgr.active_slots()):
             if info.payload.remaining > 0 and not lv[i].any():
                 raise SlotError(
                     f"rid={info.rid} cache_len {info.cache_len} has hit the "
                     f"decode capacity {self.slot_mgr.capacity} with "
                     f"{info.payload.remaining} tokens still requested")
-        return finished, iter_log
 
 
 # ---------------------------------------------------------------------------
@@ -416,12 +546,14 @@ class ServingSystem:
     def __init__(self, params, cfg: ModelConfig, *, n_prefill: int = 2,
                  decode_batch: int = 4, capacity: int = 128,
                  context_cache: Optional[ContextCache] = None,
-                 use_mtp: bool = False, mtp_params=None, moe_fn=None,
+                 use_mtp: bool = False, mtp_params=None,
+                 mtp_fused: bool = False, moe_fn=None,
                  policy: Optional[str] = None,
                  tpot_budget_ms: Optional[float] = None,
                  admission: Optional[str] = None,
                  interleave: Optional[bool] = None,
                  decode_chunk: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
                  scheduler_config: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.cc = context_cache
@@ -430,15 +562,22 @@ class ServingSystem:
             ("admission", admission), ("interleave_microbatches", interleave),
             ("decode_chunk", decode_chunk),
         ) if v is not None}
+        # use_mtp is engine state, not policy: the scheduler's MTP cost
+        # accounting must always match what the decode engine actually runs
+        # (a provided scheduler_config cannot flip it — reconfigure_scheduler
+        # enforces the same invariant later).
+        overrides["use_mtp"] = bool(use_mtp)
         sched_cfg = dataclasses.replace(
             scheduler_config or SchedulerConfig(), **overrides)
         self.prefills = [PrefillEngine(params, cfg, capacity, context_cache,
-                                       i, moe_fn) for i in range(n_prefill)]
+                                       i, moe_fn, prefill_chunk=prefill_chunk)
+                         for i in range(n_prefill)]
         self.decode = DecodeEngine(params, cfg, decode_batch, capacity,
                                    moe_fn, use_mtp, mtp_params,
                                    interleave=sched_cfg.interleave_microbatches,
                                    n_micro=sched_cfg.n_micro,
-                                   decode_chunk=sched_cfg.decode_chunk)
+                                   decode_chunk=sched_cfg.decode_chunk,
+                                   mtp_fused=mtp_fused)
         self.transfer = KVTransferEngine()
         self.scheduler = Scheduler(n_prefill, self.decode.slot_mgr, sched_cfg)
 
@@ -460,21 +599,35 @@ class ServingSystem:
             raise ValueError(
                 "decode_chunk is baked into the jitted decode loop at "
                 "ServingSystem construction; build a new system to change it")
+        if new.use_mtp != self.decode.use_mtp:
+            raise ValueError(
+                "use_mtp is baked into the decode engine at ServingSystem "
+                "construction; build a new system to change it")
         self.scheduler = Scheduler(len(self.prefills), self.decode.slot_mgr,
                                    scheduler_config)
 
-    def serve(self, requests: List[Request]) -> List[RequestResult]:
+    def serve(self, requests: List[Request],
+              open_loop: bool = False) -> List[RequestResult]:
+        """Serve a request wave. ``open_loop`` drives arrival-time
+        scheduling on the virtual clock: a request becomes visible to
+        prefill only once the clock reaches its ``arrival``, and its KV is
+        admissible only once the clock reaches its ``ready_at`` — so a
+        Poisson burst actually queues against the admission gate instead
+        of being batched up front (closed loop, the default, feeds
+        everything immediately)."""
         sched = self.scheduler
         sched.begin_epoch()            # rids may repeat across serve() waves
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         results: List[RequestResult] = []
         waiting: List[_PendingAdmission] = []
+        eps = 1e-12
         # Worst-case decode cache growth: max_new - 1 iterations, +1 slack
         # for an MTP accept on the final emitted token.
         slack = 1 if self.decode.use_mtp else 0
         while pending or waiting or self.decode.active:
             # prefill (async wrt decode; modeled sequentially on 1 CPU)
-            while pending:
+            while pending and (not open_loop or
+                               pending[0].arrival <= sched.decode_now + eps):
                 req = pending.pop(0)
                 trace = sched.on_arrival(req.rid, req.arrival, len(req.prompt))
                 # max_new <= 1 never decodes, so only the prompt must fit
@@ -513,6 +666,10 @@ class ServingSystem:
             still_waiting: List[_PendingAdmission] = []
             for idx, item in enumerate(waiting):
                 trace = sched.traces[item.result.rid]
+                if open_loop and trace.ready_at > sched.decode_now + eps:
+                    # KV not yet ready on the open-loop clock: hold (FIFO)
+                    still_waiting.extend(waiting[idx:])
+                    break
                 decision = sched.admission_decision(trace)
                 if decision == "admit":
                     slot = self.decode.free_slot()
@@ -541,9 +698,18 @@ class ServingSystem:
             # trace/SLO semantics match per-step decode.
             if self.decode.active:
                 finished, iter_log = self.decode.step_chunk()
-                for active_rids, fin_rids in iter_log:
-                    sched.on_decode_step(active_rids, fin_rids)
+                for active_rids, fin_rids, tokens_by_rid in iter_log:
+                    sched.on_decode_step(active_rids, fin_rids, tokens_by_rid)
                 for r in finished:
                     sched.on_finish(sched.traces[r.rid], len(r.tokens))
                 results.extend(finished)
+            elif open_loop and (pending or waiting):
+                # Decode pool idle with future work: fast-forward the
+                # virtual clock to the next arrival/KV-ready event so the
+                # loop makes progress instead of spinning.
+                events = [sched.traces[w.result.rid].ready_at
+                          for w in waiting]
+                if pending:
+                    events.append(pending[0].arrival)
+                sched.advance_clock(min(events))
         return results

@@ -70,6 +70,7 @@ class RequestTrace:
     decode_admit: float = 0.0
     decode_end: float = 0.0
     decode_iters: int = 0
+    decode_tokens: int = 0   # committed decode tokens (MTP: 1+accepted/iter)
     decode_seconds: float = 0.0
     tokens_out: int = 0
     shed: bool = False
@@ -88,12 +89,15 @@ class RequestTrace:
     def tpot(self) -> float:
         """Mean time per output *token* over the decode residency.
 
-        Per-token, not per-iteration: an MTP step that emits an accepted
-        draft token counts twice in the denominator (``tokens_out`` minus
-        the prefill-produced first token). Falls back to iterations while a
-        request is still in flight (``tokens_out`` unset until finish).
+        Per-token, not per-iteration: an MTP iteration that commits an
+        accepted draft token counts twice in the denominator
+        (``decode_tokens``, credited per decode iteration by the
+        scheduler). Falls back to output tokens minus the prefill-produced
+        first token, then to iterations, for traces recorded before the
+        per-iteration credit existed.
         """
-        denom = self.tokens_out - 1 if self.tokens_out > 1 else self.decode_iters
+        denom = self.decode_tokens or (
+            self.tokens_out - 1 if self.tokens_out > 1 else self.decode_iters)
         return self.decode_seconds / max(1, denom)
 
     @property
@@ -304,10 +308,38 @@ class DecodeCostModel:
     request KV-cache traffic. Defaults are paper-shaped placeholders tuned so
     the interesting SLO regimes (15–50 ms) exercise batch caps of a few to a
     few dozen requests at smoke scale.
+
+    MTP speculative decoding adds an acceptance-rate term: each iteration
+    costs ``mtp_iter_factor`` × the plain step (the base+draft verification
+    shares one weight stream — paper Fig. 22b measures ~+44%) while
+    emitting ``1 + mtp_accept`` tokens (paper α ≈ 0.70 for the trained
+    draft head). ``step_time`` charges the per-iteration cost; the
+    admission gate projects the *per-token* SLO from both terms.
     """
+
+    #: paper Fig. 22b: ~44% per-iteration latency increase under MTP
+    MTP_ITER_FACTOR = 1.44
+    #: paper §5.4.2: single-token acceptance of the trained draft head
+    MTP_ACCEPT = 0.70
 
     fixed_s: float = 4e-3
     per_req_s: float = 1e-3
+    mtp_iter_factor: float = 1.0   # per-iteration latency multiplier
+    mtp_accept: float = 0.0        # expected draft acceptance rate α
+
+    def with_mtp(self, iter_factor: Optional[float] = None,
+                 accept: Optional[float] = None) -> "DecodeCostModel":
+        """This cost model under MTP speculative decoding (paper defaults,
+        or a measured acceptance rate from the bench harness)."""
+        return dataclasses.replace(
+            self,
+            mtp_iter_factor=self.MTP_ITER_FACTOR if iter_factor is None
+            else iter_factor,
+            mtp_accept=self.MTP_ACCEPT if accept is None else accept)
+
+    @property
+    def tokens_per_iter(self) -> float:
+        return 1.0 + self.mtp_accept
 
     @classmethod
     def from_roofline(cls, step_s: float, batch_per_chip: float,
@@ -324,15 +356,24 @@ class DecodeCostModel:
         return cls(fixed_s=fixed, per_req_s=per)
 
     def step_time(self, batch: int) -> float:
-        return self.fixed_s + batch * self.per_req_s
+        """Cost of one decode *iteration* for the active batch."""
+        return (self.fixed_s + batch * self.per_req_s) * self.mtp_iter_factor
+
+    def token_time(self, batch: int) -> float:
+        """Projected time per committed *token* (TPOT): iteration cost over
+        the 1+α tokens an iteration is expected to emit."""
+        return self.step_time(batch) / self.tokens_per_iter
 
     def max_batch_for(self, tpot_budget_s: float) -> int:
-        """Largest batch whose projected TPOT meets the budget (0 = none).
+        """Largest batch whose projected per-token TPOT meets the budget
+        (0 = none). Under MTP the budget buys more batch: the iteration is
+        ``mtp_iter_factor`` slower but credits ``1+mtp_accept`` tokens.
 
         The float quotient is nudged before truncation so budgets that land
         exactly on a step time (t(B) == budget) admit batch B instead of
         B-1."""
-        b = int((tpot_budget_s - self.fixed_s) / self.per_req_s + 1e-9)
+        eff = tpot_budget_s * self.tokens_per_iter / self.mtp_iter_factor
+        b = int((eff - self.fixed_s) / self.per_req_s + 1e-9)
         return max(0, b)
 
 
@@ -491,6 +532,11 @@ class SchedulerConfig:
     # join and the clock is reconciled only at chunk boundaries) for host
     # round-trips amortized over `decode_chunk` tokens.
     decode_chunk: int = 1
+    # MTP speculative decoding: charge the virtual clock the paper's ~1.44x
+    # per-iteration verification cost while the admission gate credits
+    # 1+accept tokens per iteration (a decode_cost with explicit MTP terms
+    # overrides the paper defaults).
+    use_mtp: bool = False
 
 
 class Scheduler:
@@ -507,10 +553,14 @@ class Scheduler:
         self.config = config or SchedulerConfig()
         self.n_prefill = n_prefill
         self.slot_mgr = slot_mgr
+        cost = self.config.decode_cost
+        if (self.config.use_mtp and cost.mtp_iter_factor == 1.0
+                and cost.mtp_accept == 0.0):
+            cost = cost.with_mtp()      # paper defaults unless calibrated
+        self.cost = cost
         budget_s = (None if self.config.tpot_budget_ms is None
                     else self.config.tpot_budget_ms * 1e-3)
-        self.gate = AdmissionGate(self.config.decode_cost, budget_s,
-                                  self.config.admission)
+        self.gate = AdmissionGate(self.cost, budget_s, self.config.admission)
         self.begin_epoch()
 
     def begin_epoch(self) -> None:
@@ -528,6 +578,7 @@ class Scheduler:
         self.decode_now = 0.0       # absolute virtual time of the decode pool
         self.decode_busy = 0.0      # sum of step costs (excludes idle gaps)
         self.decode_steps = 0
+        self.decode_token_count = 0
 
     # -- prefill side ------------------------------------------------------
     def on_arrival(self, rid: int, arrival: float,
@@ -594,9 +645,17 @@ class Scheduler:
             self.router.on_complete(trace.prefill_instance)
 
     def on_decode_step(self, active_rids: Sequence[int],
-                       finished_rids: Sequence[int]) -> float:
-        """Advance the virtual clock by one decode iteration."""
-        dt = self.config.decode_cost.step_time(len(active_rids))
+                       finished_rids: Sequence[int],
+                       tokens_by_rid: Optional[Dict[int, int]] = None
+                       ) -> float:
+        """Advance the virtual clock by one decode iteration.
+
+        The clock is charged per *iteration* (MTP: ×``mtp_iter_factor``)
+        while each request is credited the tokens it actually committed —
+        ``tokens_by_rid`` from the engine (MTP: 1+accepted; omitted: 1 per
+        active request) — so TPOT traces honestly reflect speculation.
+        """
+        dt = self.cost.step_time(len(active_rids))
         self.decode_now += dt
         self.decode_busy += dt
         self.decode_steps += 1
@@ -604,12 +663,20 @@ class Scheduler:
             tr = self.traces[rid]
             tr.decode_iters += 1
             tr.decode_seconds += dt
+            toks = 1 if tokens_by_rid is None else tokens_by_rid.get(rid, 0)
+            tr.decode_tokens += toks
+            self.decode_token_count += toks
         for rid in finished_rids:
             tr = self.traces[rid]
             tr.decode_end = self.decode_now
             self.tracker.record(tr)
             self.router.on_complete(tr.prefill_instance)
         return dt
+
+    def advance_clock(self, t: float) -> None:
+        """Open-loop serving: fast-forward the idle decode pool to the next
+        arrival/KV-ready event (never rewinds)."""
+        self.decode_now = max(self.decode_now, t)
 
     def on_finish(self, trace: RequestTrace, tokens_out: int) -> None:
         trace.tokens_out = tokens_out
@@ -623,6 +690,10 @@ class Scheduler:
         s = self.tracker.summary()
         s["decode_steps"] = self.decode_steps
         s["decode_virtual_s"] = self.decode_busy
+        s["decode_tokens"] = self.decode_token_count
+        if self.decode_steps:
+            s["tokens_per_decode_step"] = (self.decode_token_count
+                                           / self.decode_steps)
         if self.gate.max_batch is not None:
             s["admitted_batch_cap"] = self.gate.max_batch
         return s
