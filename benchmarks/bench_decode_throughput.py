@@ -29,6 +29,11 @@ FAST_CHUNK = 4
 FAST_MAX_NEW = 16
 FAST_REPEATS = 3
 
+# decode pool smoke (per-engine utilization per routing policy)
+POOL_ENGINES = 2
+POOL_BATCH = 2
+POOL_REBALANCE_EVERY = 2
+
 
 def main(smoke: bool = False) -> None:
     print("name,metric,value,derived")
@@ -104,8 +109,43 @@ def _live_rows() -> None:
     emit("decode_tput", f"fastpath_chunk{FAST_CHUNK}_speedup",
          round(speedup, 2), "wall_chunk1/wall_chunkN")
     artifact["fastpath_speedup"] = speedup
+    artifact["pool"] = _pool_rows()
     path = write_bench_artifact("decode", artifact)
     emit("decode_tput", "artifact", path, "")
+
+
+def _pool_rows() -> dict:
+    """2-engine decode-pool smoke per routing policy: per-engine virtual
+    throughput/utilization + migration counts, persisted into the decode
+    artifact (schema 3) so pool balance is tracked PR-over-PR."""
+    from benchmarks.common import live_pool_serve
+
+    section = {"engines": POOL_ENGINES, "decode_batch": POOL_BATCH,
+               "policies": []}
+    for policy in ("round_robin", "least_loaded_slots", "cache_affinity"):
+        results, scheduler, system = live_pool_serve(
+            policy=policy, decode_engines=POOL_ENGINES,
+            decode_batch=POOL_BATCH, rebalance_every=POOL_REBALANCE_EVERY)
+        s = scheduler.summary()
+        busy = s["engine_busy_s"]
+        toks = s["engine_decode_tokens"]
+        per_engine = [
+            {"engine": e,
+             "decode_tokens": toks[e],
+             "tokens_per_virtual_s": round(toks[e] / max(busy[e], 1e-12), 1),
+             "util": s["engine_util"][e]}
+            for e in range(POOL_ENGINES)]
+        section["policies"].append({
+            "policy": policy, "completed": s["completed"],
+            "migrations": s["migrations"], "per_engine": per_engine})
+        emit("decode_tput", f"pool_{policy}_tokens_per_virtual_s",
+             round(s["decode_tokens"] / max(s["decode_virtual_s"], 1e-12), 1),
+             f"per_engine={[p['decode_tokens'] for p in per_engine]};"
+             f"migrations={s['migrations']}")
+        emit("decode_tput", f"pool_{policy}_engine_util",
+             "|".join(str(u) for u in s["engine_util"]),
+             f"completed={s['completed']}")
+    return section
 
 
 def _optimized_row(arch: str, base_rec) -> None:

@@ -64,10 +64,12 @@ def emit(name: str, metric: str, value, derived: str = "") -> None:
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def write_bench_artifact(name: str, payload: Dict, schema: int = 2) -> str:
+def write_bench_artifact(name: str, payload: Dict, schema: int = 3) -> str:
     """Persist a benchmark record as BENCH_<name>.json at the repo root so
-    the perf trajectory is trackable PR-over-PR. Schema 2 adds the MTP
-    section (acceptance rate + speedup) to the decode artifact."""
+    the perf trajectory is trackable PR-over-PR. Schema 2 added the MTP
+    section (acceptance rate + speedup) to the decode artifact; schema 3
+    adds the decode-pool section (per-engine throughput + routing policy +
+    migration counts)."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump({"schema": schema, "bench": name, **payload}, f, indent=1,
@@ -76,7 +78,7 @@ def write_bench_artifact(name: str, payload: Dict, schema: int = 2) -> str:
     return path
 
 
-def update_bench_artifact(name: str, extra: Dict, schema: int = 2) -> str:
+def update_bench_artifact(name: str, extra: Dict, schema: int = 3) -> str:
     """Merge ``extra`` into an existing BENCH_<name>.json (or start a fresh
     one) — benches that contribute sections to a shared artifact (bench_mtp
     -> BENCH_decode.json) use this instead of clobbering it."""
@@ -224,6 +226,54 @@ def live_smoke_serve(*, decode_batch: int, tpot_budget_ms=None,
                         decode_cost=calibrated_decode_cost(LIVE_ARCH)))
     results = system.serve(reqs)
     return results, system.scheduler
+
+
+def live_pool_serve(*, policy: str = "least_loaded_slots",
+                    decode_engines: int = 2, decode_batch: int = 2,
+                    tpot_budget_ms=None, admission: str = "shed",
+                    rebalance_every: int = 0, max_new: int = LIVE_MAX_NEW,
+                    shared_prefix: int = 8):
+    """Serve a shared-prefix smoke stream through a decode pool; returns
+    (results, scheduler, system). The pooled ServingSystem (one jit per
+    engine) is cached per shape key; the routing policy and rebalance
+    cadence are control-plane and swap via ``reconfigure_scheduler``, so a
+    policy sweep reuses one compiled pool. Prompts share a prefix and the
+    system carries an EMS context cache, so ``cache_affinity`` has real
+    block keys to route on."""
+    import numpy as np
+
+    from repro.mempool import ContextCache, MemoryPool
+    from repro.serving import Request, SchedulerConfig, ServingSystem
+
+    cfg, params = live_model()
+    rng = np.random.RandomState(0)
+    prefix = list(rng.randint(0, cfg.vocab_size, shared_prefix))
+    reqs = [Request(i, prefix + list(rng.randint(
+                0, cfg.vocab_size, LIVE_PROMPT_LEN - shared_prefix)),
+                    max_new) for i in range(LIVE_REQUESTS)]
+    key = ("pool", decode_engines, decode_batch, max_new)
+    system = _live_systems.get(key)
+    if system is None:
+        cc = ContextCache(MemoryPool(n_nodes=4), block_tokens=4,
+                          model_tag=cfg.name)
+        system = ServingSystem(
+            params, cfg, n_prefill=2, decode_batch=decode_batch,
+            capacity=LIVE_PROMPT_LEN + max_new + 16,
+            decode_engines=decode_engines, context_cache=cc)
+        # Warm the EMS context cache (and the jit caches) on the same
+        # stream before any measured run: otherwise the first policy in a
+        # sweep pays cold-prefix prefill while later ones reuse it, and
+        # the per-policy rows would compare cache warmth, not routing.
+        system.serve([Request(r.rid, list(r.prompt), r.max_new_tokens)
+                      for r in reqs])
+        _live_systems[key] = system
+    system.reconfigure_scheduler(
+        SchedulerConfig(tpot_budget_ms=tpot_budget_ms, admission=admission,
+                        decode_policy=policy,
+                        decode_rebalance_every=rebalance_every,
+                        decode_cost=calibrated_decode_cost(LIVE_ARCH)))
+    results = system.serve(reqs)
+    return results, system.scheduler, system
 
 
 def live_poisson_serve(*, rate_rps: float, tpot_budget_ms=None,

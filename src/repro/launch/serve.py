@@ -4,9 +4,11 @@
       --n-requests 6 --prompt-len 24 --max-new 8 \
       [--mtp [--mtp-fused] [--fit-draft]] [--no-cache] \
       [--policy least_loaded|round_robin|queue_depth] \
+      [--decode-engines 2 --decode-router least_loaded_slots|round_robin|\
+       cache_affinity [--rebalance-every 4]] \
       [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
       [--decode-chunk 4] [--prefill-chunk 32] \
-      [--poisson-rate 100 [--open-loop]] [--trace]
+      [--poisson-rate 100 [--open-loop]] [--seed 0] [--trace]
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ from repro.core import init_mtp_params
 from repro.mempool import ContextCache, MemoryPool
 from repro.models import init_params
 from repro.serving import Request, ServingSystem
+from repro.serving.pool import DECODE_ROUTERS
 from repro.serving.scheduler import ROUTERS
 
 
@@ -46,6 +49,21 @@ def main() -> None:
     ap.add_argument("--policy", default="least_loaded",
                     choices=sorted(ROUTERS),
                     help="prefill routing policy")
+    ap.add_argument("--decode-engines", type=int, default=1,
+                    help="decode pool size (independent engines behind a "
+                         "routing policy, each with its own slot manager)")
+    ap.add_argument("--decode-router", default="least_loaded_slots",
+                    choices=sorted(DECODE_ROUTERS),
+                    help="decode-pool routing policy (cache_affinity "
+                         "prefers the engine holding the request's EMS "
+                         "prefix blocks)")
+    ap.add_argument("--rebalance-every", type=int, default=0,
+                    help="every N decode turns, migrate one request's KV "
+                         "from the hottest pool engine to the coldest "
+                         "(0 = off)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for the synthetic request stream "
+                         "(identical seed => identical trace)")
     ap.add_argument("--tpot-budget-ms", type=float, default=None,
                     help="TPOT SLO budget for the admission gate (virtual ms)")
     ap.add_argument("--admission", default="queue", choices=("queue", "shed"),
@@ -77,14 +95,15 @@ def main() -> None:
         cc = ContextCache(pool, block_tokens=8, model_tag=cfg.name)
     mtp_params = init_mtp_params(jax.random.PRNGKey(1), cfg) if args.mtp else None
 
-    rng = np.random.RandomState(0)
+    rng = np.random.RandomState(args.seed)
     shared = min(args.shared_prefix, args.prompt_len - 1)
     open_loop = args.open_loop or args.poisson_rate is not None
     if args.poisson_rate is not None:
         from repro.serving import poisson_requests
         reqs = poisson_requests(args.n_requests, args.poisson_rate,
                                 args.prompt_len, args.max_new,
-                                cfg.vocab_size, shared_prefix=shared)
+                                cfg.vocab_size, seed=args.seed,
+                                shared_prefix=shared)
     else:
         prefix = list(rng.randint(0, cfg.vocab_size, shared))
         reqs = [Request(i, prefix + list(rng.randint(0, cfg.vocab_size,
@@ -105,6 +124,9 @@ def main() -> None:
     system = ServingSystem(params, cfg, n_prefill=2,
                            decode_batch=args.decode_batch,
                            capacity=args.prompt_len + args.max_new + 8,
+                           decode_engines=args.decode_engines,
+                           decode_router=args.decode_router,
+                           decode_rebalance_every=args.rebalance_every,
                            context_cache=cc, use_mtp=args.mtp,
                            mtp_params=mtp_params, mtp_fused=args.mtp_fused,
                            policy=args.policy,
@@ -128,6 +150,14 @@ def main() -> None:
     print("SLO summary (virtual clock): "
           + ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in summary.items()))
+    if args.decode_engines > 1:
+        util = summary.get("engine_util", [])
+        print("decode pool: " + ", ".join(
+            f"engine{st['engine']} active={st['active']} "
+            f"iters={st['iters']} util={util[st['engine']] if util else 0}"
+            for st in system.pool.engine_stats()))
+        print(f"migrations: {system.pool.migrations} "
+              f"({system.pool.migrated_bytes/2**20:.2f} MiB over RDMA plane)")
     if args.prefill_chunk:
         calls = sum(e.continue_calls for e in system.prefills)
         widths = set().union(*(e.continue_widths for e in system.prefills))

@@ -39,6 +39,13 @@ class ContextCache:
         self.dedup_skipped = 0
         self.stored_blocks = 0
 
+    def block_keys(self, tokens: Sequence[int]) -> List[str]:
+        """Prefix-chained content keys of every complete block of
+        ``tokens`` — the affinity unit for EMS-aware decode-pool routing
+        (a request is attracted to the engine whose recent residents
+        shared these keys)."""
+        return _block_keys(tokens, self.block, self.model_tag)
+
     # -- prefill-side: longest reusable prefix ------------------------------
     def match_prefix(self, tokens: Sequence[int]) -> Tuple[int, List[str]]:
         """Returns (#reusable tokens, keys of matched blocks)."""

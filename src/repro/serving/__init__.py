@@ -23,6 +23,15 @@ from repro.serving.scheduler import (  # noqa: F401
     decode_cost_from_roofline,
     make_router,
 )
+from repro.serving.pool import (  # noqa: F401
+    DECODE_ROUTERS,
+    CacheAffinityRouter,
+    DecodePool,
+    DecodePoolRouter,
+    LeastLoadedSlotsRouter,
+    PoolRoundRobinRouter,
+    make_decode_router,
+)
 from repro.serving.workload import poisson_requests  # noqa: F401
 from repro.serving.transfer import (  # noqa: F401
     KVTransferEngine,

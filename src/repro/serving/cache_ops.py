@@ -118,6 +118,47 @@ def pack_blocks(cfg: ModelConfig, caches, n_blocks: int,
     return [flat[bi] for bi in range(n_blocks)]
 
 
+def pack_request(cfg: ModelConfig, req_slice) -> np.ndarray:
+    """Serialize one request's cache slice (a :func:`slice_request` result)
+    into a contiguous byte buffer — the drain unit of cross-engine KV
+    migration. Only batched leaves are packed (unbatched bookkeeping leaves
+    such as ``length`` scalars stay engine-local, exactly as
+    :func:`insert_request` leaves them untouched). Bytes are *viewed*, not
+    cast, so the round trip through :func:`unpack_request` is bit-exact for
+    every dtype."""
+    axes = cache_batch_axes(cfg, req_slice)
+    parts: List[np.ndarray] = []
+    jax.tree.map(
+        lambda leaf, ax: None if ax is None else parts.append(
+            np.ascontiguousarray(np.asarray(leaf)).reshape(-1).view(np.uint8)),
+        req_slice, axes)
+    return np.concatenate(parts) if parts else np.zeros(0, np.uint8)
+
+
+def unpack_request(cfg: ModelConfig, flat: np.ndarray, template):
+    """Inverse of :func:`pack_request`. ``template`` is a shape/dtype
+    reference slice from the *destination* engine (``slice_request`` of the
+    target row); its unbatched leaves pass through unchanged."""
+    axes = cache_batch_axes(cfg, template)
+    offset = [0]
+
+    def _take(leaf, ax):
+        if ax is None:
+            return leaf
+        n = leaf.size * leaf.dtype.itemsize
+        arr = np.frombuffer(flat[offset[0]:offset[0] + n].tobytes(),
+                            dtype=leaf.dtype).reshape(leaf.shape)
+        offset[0] += n
+        return jnp.asarray(arr)
+
+    out = jax.tree.map(_take, template, axes)
+    if offset[0] != flat.size:
+        raise ValueError(
+            f"migration payload of {flat.size} bytes does not match the "
+            f"destination cache layout ({offset[0]} bytes expected)")
+    return out
+
+
 def pack_payload(payload: Dict[str, Any]) -> np.ndarray:
     """Flatten a seq_slice payload to one contiguous byte buffer (the unit
     stored in the EMS pool)."""

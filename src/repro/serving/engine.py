@@ -34,6 +34,7 @@ from repro.core import mtp as mtp_mod
 from repro.mempool.context_cache import ContextCache
 from repro.models import model as model_mod
 from repro.serving import cache_ops
+from repro.serving.pool import DecodePool, make_decode_router
 from repro.serving.scheduler import (
     DecodeSlotManager,
     MicrobatchInterleaver,
@@ -343,6 +344,35 @@ class DecodeEngine:
     def active(self) -> int:
         return self.slot_mgr.active
 
+    def export_slot(self, slot: int) -> Tuple[np.ndarray, int, int, int]:
+        """Drain one active slot's device state for cross-engine migration:
+        (packed cache bytes, cache_len, cur_tok, draft_tok). The cache rows
+        are serialized byte-exactly via :func:`cache_ops.pack_request` —
+        the payload a peer engine re-inserts bitwise-identically."""
+        info = self.slot_mgr.get(slot)
+        if info is None:
+            raise SlotError(f"export of empty slot {slot}")
+        req_slice = cache_ops.slice_request(self.cfg, self.caches, slot)
+        return (cache_ops.pack_request(self.cfg, req_slice),
+                int(self.cache_len[slot]), int(self.cur_tok[slot]),
+                int(self.draft_tok[slot]))
+
+    def import_slot(self, slot: int, flat: np.ndarray, cache_len: int,
+                    cur_tok: int, draft_tok: int, rid: int,
+                    payload: Any) -> None:
+        """Land a migrated request on ``slot``: allocate the slot with the
+        engine-side payload that traveled with it, then unpack the drained
+        cache bytes against this engine's own layout (shape/dtype template
+        from the destination row) and insert them."""
+        self.slot_mgr.allocate(rid, cache_len, payload=payload, slot=slot)
+        template = cache_ops.slice_request(self.cfg, self.caches, slot)
+        req_cache = cache_ops.unpack_request(self.cfg, flat, template)
+        self.caches = cache_ops.insert_request(self.cfg, self.caches,
+                                               req_cache, slot)
+        self.cache_len = self.cache_len.at[slot].set(cache_len)
+        self.cur_tok = self.cur_tok.at[slot].set(cur_tok)
+        self.draft_tok = self.draft_tok.at[slot].set(draft_tok)
+
     def step(self) -> List[RequestResult]:
         """One host-sync decode turn. Returns requests finished this turn."""
         return self.step_chunk()[0]
@@ -530,6 +560,7 @@ class _PendingAdmission:
     prompt_len: int
     result: RequestResult
     max_new: int
+    block_keys: Tuple[str, ...] = ()
 
 
 class ServingSystem:
@@ -538,13 +569,20 @@ class ServingSystem:
     ``policy`` selects the prefill router by name (``least_loaded``,
     ``round_robin``, ``queue_depth``); ``tpot_budget_ms`` + ``admission``
     configure SLO admission control; ``interleave`` pairs two decode
-    microbatches per step. Pass a full :class:`SchedulerConfig` as
-    ``scheduler_config`` to override cost-model constants; explicitly
-    passed scheduling kwargs still win over the provided config.
+    microbatches per step. ``decode_engines`` > 1 builds a
+    :class:`~repro.serving.pool.DecodePool` of identical engines behind a
+    ``decode_router`` policy (``least_loaded_slots``, ``round_robin``,
+    ``cache_affinity``) with cross-engine KV migration. Pass a full
+    :class:`SchedulerConfig` as ``scheduler_config`` to override cost-model
+    constants; explicitly passed scheduling kwargs still win over the
+    provided config.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_prefill: int = 2,
                  decode_batch: int = 4, capacity: int = 128,
+                 decode_engines: int = 1,
+                 decode_router: Optional[str] = None,
+                 decode_rebalance_every: Optional[int] = None,
                  context_cache: Optional[ContextCache] = None,
                  use_mtp: bool = False, mtp_params=None,
                  mtp_fused: bool = False, moe_fn=None,
@@ -561,6 +599,8 @@ class ServingSystem:
             ("policy", policy), ("tpot_budget_ms", tpot_budget_ms),
             ("admission", admission), ("interleave_microbatches", interleave),
             ("decode_chunk", decode_chunk),
+            ("decode_policy", decode_router),
+            ("decode_rebalance_every", decode_rebalance_every),
         ) if v is not None}
         # use_mtp is engine state, not policy: the scheduler's MTP cost
         # accounting must always match what the decode engine actually runs
@@ -572,14 +612,19 @@ class ServingSystem:
         self.prefills = [PrefillEngine(params, cfg, capacity, context_cache,
                                        i, moe_fn, prefill_chunk=prefill_chunk)
                          for i in range(n_prefill)]
-        self.decode = DecodeEngine(params, cfg, decode_batch, capacity,
-                                   moe_fn, use_mtp, mtp_params,
-                                   interleave=sched_cfg.interleave_microbatches,
-                                   n_micro=sched_cfg.n_micro,
-                                   decode_chunk=sched_cfg.decode_chunk,
-                                   mtp_fused=mtp_fused)
+        engines = [DecodeEngine(params, cfg, decode_batch, capacity,
+                                moe_fn, use_mtp, mtp_params, seed=e,
+                                interleave=sched_cfg.interleave_microbatches,
+                                n_micro=sched_cfg.n_micro,
+                                decode_chunk=sched_cfg.decode_chunk,
+                                mtp_fused=mtp_fused)
+                   for e in range(decode_engines)]
+        self.pool = DecodePool(
+            engines, make_decode_router(sched_cfg.decode_policy,
+                                        decode_engines))
+        self.decode = engines[0]       # single-engine compatibility alias
         self.transfer = KVTransferEngine()
-        self.scheduler = Scheduler(n_prefill, self.decode.slot_mgr, sched_cfg)
+        self.scheduler = Scheduler(n_prefill, self.pool.slot_mgrs, sched_cfg)
 
     def reconfigure_scheduler(self, scheduler_config: SchedulerConfig) -> None:
         """Swap policy/SLO configuration between serve() waves without
@@ -603,8 +648,23 @@ class ServingSystem:
             raise ValueError(
                 "use_mtp is baked into the decode engine at ServingSystem "
                 "construction; build a new system to change it")
-        self.scheduler = Scheduler(len(self.prefills), self.decode.slot_mgr,
+        if new.decode_policy != cur.decode_policy:
+            # Routing is pure control plane: swap the pool router in place
+            # (a fresh policy instance — affinity/cursor state resets).
+            self.pool.router = make_decode_router(new.decode_policy,
+                                                  self.pool.n)
+        self.scheduler = Scheduler(len(self.prefills), self.pool.slot_mgrs,
                                    scheduler_config)
+
+    def migrate_request(self, rid: int, dst_engine: int) -> float:
+        """Force a cross-engine KV migration of an in-flight request (the
+        drain is charged to the RDMA-plane transfer engine and recorded on
+        the scheduler trace). Returns the virtual drain seconds."""
+        trace = self.scheduler.traces.get(rid)
+        src_e, _, seconds = self.pool.migrate(rid, dst_engine, self.transfer)
+        if trace is not None:
+            self.scheduler.on_migrate(trace, src_e, dst_engine, seconds)
+        return seconds
 
     def serve(self, requests: List[Request],
               open_loop: bool = False) -> List[RequestResult]:
@@ -624,7 +684,10 @@ class ServingSystem:
         # Worst-case decode cache growth: max_new - 1 iterations, +1 slack
         # for an MTP accept on the final emitted token.
         slack = 1 if self.decode.use_mtp else 0
-        while pending or waiting or self.decode.active:
+        affinity = self.cc is not None and self.pool.router.uses_affinity
+        rebalance_every = sched.config.decode_rebalance_every
+        decode_turns = 0
+        while pending or waiting or self.pool.active:
             # prefill (async wrt decode; modeled sequentially on 1 CPU)
             while pending and (not open_loop or
                                pending[0].arrival <= sched.decode_now + eps):
@@ -659,9 +722,11 @@ class ServingSystem:
                     continue
                 res.transfer_seconds = self.transfer.transfer(caches)
                 sched.on_transfer(trace, res.transfer_seconds)
+                keys = tuple(self.cc.block_keys(req.prompt)) if affinity \
+                    else ()
                 waiting.append(_PendingAdmission(first, caches,
                                                  len(req.prompt), res,
-                                                 req.max_new_tokens))
+                                                 req.max_new_tokens, keys))
             # admit in FIFO order; the gate may queue or shed (SLO control)
             still_waiting: List[_PendingAdmission] = []
             for idx, item in enumerate(waiting):
@@ -670,9 +735,10 @@ class ServingSystem:
                     # KV not yet ready on the open-loop clock: hold (FIFO)
                     still_waiting.extend(waiting[idx:])
                     break
-                decision = sched.admission_decision(trace)
+                engine = self.pool.select_engine(item.block_keys)
+                decision = sched.admission_decision(trace, engine)
                 if decision == "admit":
-                    slot = self.decode.free_slot()
+                    slot = self.pool.engines[engine].free_slot()
                     if slot is None:
                         # Stale admission: the gate said "admit" but no slot
                         # is actually free (gate/slot state diverged). Never
@@ -680,9 +746,10 @@ class ServingSystem:
                         # requeue and retry after the next decode turn.
                         still_waiting.extend(waiting[idx:])
                         break
-                    self.decode.add(slot, item.caches, item.first,
-                                    item.prompt_len, item.result, item.max_new)
-                    sched.on_admit(trace, slot)
+                    self.pool.add(engine, slot, item.caches, item.first,
+                                  item.prompt_len, item.result, item.max_new,
+                                  item.block_keys)
+                    sched.on_admit(trace, slot, engine)
                 elif decision == "shed":
                     item.result.shed = True
                     item.result.tokens.append(item.first)
@@ -694,22 +761,46 @@ class ServingSystem:
                     break
             waiting = still_waiting
             # decode turn: decode_chunk device iterations per host sync on
-            # the fast path; the virtual clock is charged per iteration so
-            # trace/SLO semantics match per-step decode.
-            if self.decode.active:
-                finished, iter_log = self.decode.step_chunk()
-                for active_rids, fin_rids, tokens_by_rid in iter_log:
-                    sched.on_decode_step(active_rids, fin_rids, tokens_by_rid)
-                for r in finished:
-                    sched.on_finish(sched.traces[r.rid], len(r.tokens))
-                results.extend(finished)
+            # the fast path; every engine with active slots steps, and each
+            # engine's virtual clock is charged per iteration so trace/SLO
+            # semantics match per-step single-engine decode.
+            if self.pool.active:
+                decode_turns += 1
+                stepped = []
+                for engine, finished, iter_log in self.pool.step_all():
+                    stepped.append(engine)
+                    for active_rids, fin_rids, tokens_by_rid in iter_log:
+                        sched.on_decode_step(active_rids, fin_rids,
+                                             tokens_by_rid, engine=engine)
+                    for r in finished:
+                        sched.on_finish(sched.traces[r.rid], len(r.tokens))
+                    results.extend(finished)
+                sched.sync_idle_clocks(stepped)
+                if rebalance_every and decode_turns % rebalance_every == 0:
+                    moved = self.pool.rebalance(self.transfer)
+                    if moved is not None:
+                        rid, src_e, dst_e, seconds = moved
+                        sched.on_migrate(sched.traces[rid], src_e, dst_e,
+                                         seconds)
             elif open_loop and (pending or waiting):
                 # Decode pool idle with future work: fast-forward the
-                # virtual clock to the next arrival/KV-ready event so the
-                # loop makes progress instead of spinning.
-                events = [sched.traces[w.result.rid].ready_at
-                          for w in waiting]
+                # virtual clock to the next event that can actually
+                # unblock progress. Admission is FIFO, so that is the
+                # *head* waiting request's KV-ready time — not the min
+                # over all waiting requests: a later-arriving request can
+                # finish prefill earlier (shorter prompt, idler instance),
+                # and advancing only to its ready_at would leave the head
+                # still gated and the loop spinning on the same instant.
+                events = []
+                if waiting:
+                    events.append(
+                        sched.traces[waiting[0].result.rid].ready_at)
                 if pending:
                     events.append(pending[0].arrival)
                 sched.advance_clock(min(events))
+        if self.decode.use_mtp:
+            # Acceptance-rate feedback: fold the wave's measured draft
+            # acceptance into the cost model so the next wave's admission
+            # gate sizes its batch to observed, not assumed, speculation.
+            sched.feedback_mtp_acceptance()
         return results

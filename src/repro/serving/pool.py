@@ -1,0 +1,309 @@
+"""Multi-instance decode pools with EMS-aware routing and cross-engine KV
+migration (paper §4.1; xDeepServe / DeepServe pool-level scheduling).
+
+The paper's peer-to-peer architecture scales the decode pool independently
+of prefill and caching, and the UB plane makes *any* decode instance
+reachable from the shared KV store. This module adds the pool layer on top
+of :class:`~repro.serving.engine.DecodeEngine`:
+
+* :class:`DecodePoolRouter` — pluggable decode-engine routing policy (by
+  name: ``least_loaded_slots``, ``round_robin``, ``cache_affinity``).
+  Unlike :class:`~repro.serving.scheduler.PrefillRouter` (locality-free by
+  design), decode routing MAY use data placement: ``cache_affinity``
+  prefers the engine that already holds a request's reusable EMS prefix
+  blocks (block keys from ``mempool/context_cache.py``), so the warm KV
+  never crosses engines. ``select`` must be *pure* — the pool commits a
+  decision via :meth:`DecodePoolRouter.on_admit` only when the request is
+  actually placed, so a gated/waiting request never mutates router state
+  (decisions stay deterministic across admission retries).
+* :class:`DecodePool` — owns N engines (identical model/capacity), steps
+  every engine with active slots per serving turn, and performs
+  **cross-engine KV migration**: a slot's cache rows are drained through
+  :func:`~repro.serving.cache_ops.pack_request` into one contiguous byte
+  buffer, charged to the RDMA-plane transfer engine, and re-inserted
+  bit-exactly into a peer engine — the mechanism behind hot-pool
+  rebalancing and engine retirement.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.scheduler import SlotError
+
+
+# ---------------------------------------------------------------------------
+# Decode-pool routing policies
+# ---------------------------------------------------------------------------
+
+
+class DecodePoolRouter:
+    """Chooses a decode engine for an admitted request.
+
+    ``select`` sees per-engine active/free slot counts plus the request's
+    EMS block keys, and must be pure and deterministic; state transitions
+    happen only in ``on_admit`` (called when the placement commits).
+    """
+
+    name = "base"
+    #: whether the ServingSystem should compute EMS block keys per request
+    uses_affinity = False
+
+    def __init__(self, n_engines: int):
+        if n_engines < 1:
+            raise ValueError("need at least one decode engine")
+        self.n = n_engines
+
+    def select(self, active: Sequence[int], free: Sequence[int],
+               block_keys: Sequence[str] = ()) -> int:
+        raise NotImplementedError
+
+    def on_admit(self, engine: int,
+                 block_keys: Sequence[str] = ()) -> None:  # pragma: no cover
+        """Notification that a routed request was actually placed."""
+
+
+class LeastLoadedSlotsRouter(DecodePoolRouter):
+    """Engine with the fewest active slots, preferring engines that have a
+    free slot at all (ties → lowest id)."""
+
+    name = "least_loaded_slots"
+
+    def select(self, active: Sequence[int], free: Sequence[int],
+               block_keys: Sequence[str] = ()) -> int:
+        return min(range(self.n), key=lambda i: (free[i] <= 0, active[i], i))
+
+
+class PoolRoundRobinRouter(DecodePoolRouter):
+    """Strict cyclic assignment in admission order. The cursor advances on
+    *commit* (``on_admit``), so a request the gate holds retries the same
+    engine — deterministic for a fixed request stream."""
+
+    name = "round_robin"
+
+    def __init__(self, n_engines: int):
+        super().__init__(n_engines)
+        self._next = 0
+
+    def select(self, active: Sequence[int], free: Sequence[int],
+               block_keys: Sequence[str] = ()) -> int:
+        return self._next
+
+    def on_admit(self, engine: int,
+                 block_keys: Sequence[str] = ()) -> None:
+        self._next = (engine + 1) % self.n
+
+
+class CacheAffinityRouter(DecodePoolRouter):
+    """EMS-aware placement: prefer the engine already holding the request's
+    reusable prefix blocks (most matched block keys wins), falling back to
+    least-loaded-slots. Engines with no free slot are deprioritized so
+    affinity never stalls the pool while a peer sits idle; the residency
+    map persists across serve() waves (cache affinity is cross-wave by
+    nature)."""
+
+    name = "cache_affinity"
+    uses_affinity = True
+
+    def __init__(self, n_engines: int):
+        super().__init__(n_engines)
+        self._resident: Dict[str, int] = {}   # block key -> last engine
+
+    def score(self, block_keys: Sequence[str]) -> List[int]:
+        scores = [0] * self.n
+        for k in block_keys:
+            e = self._resident.get(k)
+            if e is not None:
+                scores[e] += 1
+        return scores
+
+    def select(self, active: Sequence[int], free: Sequence[int],
+               block_keys: Sequence[str] = ()) -> int:
+        scores = self.score(block_keys)
+        return min(range(self.n),
+                   key=lambda i: (free[i] <= 0, -scores[i], active[i], i))
+
+    def on_admit(self, engine: int,
+                 block_keys: Sequence[str] = ()) -> None:
+        for k in block_keys:
+            self._resident[k] = engine
+
+
+DECODE_ROUTERS = {r.name: r for r in
+                  (LeastLoadedSlotsRouter, PoolRoundRobinRouter,
+                   CacheAffinityRouter)}
+
+
+def make_decode_router(policy: str, n_engines: int) -> DecodePoolRouter:
+    try:
+        return DECODE_ROUTERS[policy](n_engines)
+    except KeyError:
+        raise ValueError(
+            f"unknown decode routing policy {policy!r}; "
+            f"available: {sorted(DECODE_ROUTERS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# The pool
+# ---------------------------------------------------------------------------
+
+
+class DecodePool:
+    """N decode engines behind one routing/migration facade.
+
+    Engines must be homogeneous (same model config and KV capacity) so a
+    migrated cache payload lands on an identical layout. Compute stays in
+    the engines; the pool only routes, steps, and moves KV.
+    """
+
+    def __init__(self, engines: Sequence, router: DecodePoolRouter):
+        engines = list(engines)
+        if not engines:
+            raise ValueError("need at least one decode engine")
+        if router.n != len(engines):
+            raise ValueError(
+                f"router sized for {router.n} engines, pool has "
+                f"{len(engines)}")
+        if len({e.capacity for e in engines}) != 1 or \
+                len({e.cfg.name for e in engines}) != 1:
+            raise ValueError(
+                "pool engines must share model config and KV capacity "
+                "(migration payloads assume an identical cache layout)")
+        self.engines = engines
+        self.router = router
+        self.migrations = 0
+        self.migrated_bytes = 0
+
+    # -- aggregate views ---------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.engines)
+
+    @property
+    def active(self) -> int:
+        return sum(e.active for e in self.engines)
+
+    @property
+    def capacity(self) -> int:
+        return self.engines[0].capacity
+
+    @property
+    def use_mtp(self) -> bool:
+        return self.engines[0].use_mtp
+
+    @property
+    def slot_mgrs(self) -> List:
+        return [e.slot_mgr for e in self.engines]
+
+    def locate(self, rid: int) -> Optional[Tuple[int, int]]:
+        """(engine, slot) currently decoding ``rid``, or None."""
+        for e, eng in enumerate(self.engines):
+            for slot, info in eng.slot_mgr.active_slots():
+                if info.rid == rid:
+                    return e, slot
+        return None
+
+    # -- routing + placement ----------------------------------------------
+    def select_engine(self, block_keys: Sequence[str] = ()) -> int:
+        return self.router.select([e.active for e in self.engines],
+                                  [e.slot_mgr.free for e in self.engines],
+                                  block_keys)
+
+    def add(self, engine: int, slot: int, req_cache, first_token: int,
+            prompt_len: int, result, max_new: int,
+            block_keys: Sequence[str] = ()) -> None:
+        """Place a prefilled request on ``engine`` and commit the routing
+        decision (router state mutates only here)."""
+        self.engines[engine].add(slot, req_cache, first_token, prompt_len,
+                                 result, max_new)
+        self.router.on_admit(engine, block_keys)
+
+    # -- stepping ----------------------------------------------------------
+    def step_all(self) -> List[Tuple[int, list, list]]:
+        """One decode turn across the pool: every engine with active slots
+        runs one host-sync chunk. Returns ``(engine, finished, iter_log)``
+        per stepped engine, in engine order, so the scheduler can charge
+        each engine's virtual clock independently."""
+        out = []
+        for e, eng in enumerate(self.engines):
+            if eng.active:
+                finished, iter_log = eng.step_chunk()
+                out.append((e, finished, iter_log))
+        return out
+
+    # -- cross-engine KV migration ----------------------------------------
+    def migrate(self, rid: int, dst_engine: int,
+                transfer=None) -> Tuple[int, int, float]:
+        """Drain ``rid``'s slot from its current engine into ``dst_engine``
+        bit-exactly. Returns (src_engine, dst_slot, transfer_seconds).
+
+        The slot's cache rows, ``cache_len``, current/draft tokens, and
+        engine-side payload all move; the drain is charged to the
+        RDMA-plane ``transfer`` engine when one is given (the paper's
+        scale-out plane — migration never contends with decode compute).
+        """
+        loc = self.locate(rid)
+        if loc is None:
+            raise SlotError(f"rid={rid} is not resident in any pool engine")
+        src_e, src_slot = loc
+        if src_e == dst_engine:
+            raise ValueError(
+                f"rid={rid} already decodes on engine {dst_engine}")
+        if not 0 <= dst_engine < self.n:
+            raise ValueError(f"no engine {dst_engine} in a pool of {self.n}")
+        src, dst = self.engines[src_e], self.engines[dst_engine]
+        dst_slot = dst.slot_mgr.free_slot()
+        if dst_slot is None:
+            raise SlotError(
+                f"engine {dst_engine} has no free slot for migration")
+        flat, cache_len, cur_tok, draft_tok = src.export_slot(src_slot)
+        seconds = 0.0 if transfer is None else transfer.migrate(flat)
+        info = src.slot_mgr.release(src_slot)
+        dst.import_slot(dst_slot, flat, cache_len, cur_tok, draft_tok,
+                        info.rid, info.payload)
+        self.migrations += 1
+        self.migrated_bytes += int(flat.nbytes)
+        return src_e, dst_slot, seconds
+
+    def rebalance(self, transfer=None
+                  ) -> Optional[Tuple[int, int, int, float]]:
+        """Migrate one request from the hottest engine to the coldest when
+        the active-slot imbalance is >= 2 and the coldest has room — the
+        pool-level rebalancing that keeps per-engine batches (and therefore
+        per-engine TPOT) even. Deterministic: lowest engine ids win ties,
+        the hottest engine's lowest-numbered active slot moves. Returns
+        (rid, src_engine, dst_engine, seconds) or None."""
+        act = [e.active for e in self.engines]
+        hot = min(range(self.n), key=lambda i: (-act[i], i))
+        cold = min(range(self.n), key=lambda i: (act[i], i))
+        if act[hot] - act[cold] < 2 \
+                or self.engines[cold].slot_mgr.free_slot() is None:
+            return None
+        _, info = next(self.engines[hot].slot_mgr.active_slots())
+        rid = info.rid
+        src_e, _, seconds = self.migrate(rid, cold, transfer)
+        return rid, src_e, cold, seconds
+
+    def drain_engine(self, engine: int, transfer=None
+                     ) -> List[Tuple[int, int, float]]:
+        """Retire an engine: migrate every active slot to peers with free
+        capacity (least-loaded first). Returns one (rid, dst, seconds) per
+        moved request; raises :class:`SlotError` when the peers cannot
+        absorb the load."""
+        moved = []
+        for _, info in list(self.engines[engine].slot_mgr.active_slots()):
+            peers = [i for i in range(self.n) if i != engine
+                     and self.engines[i].slot_mgr.free_slot() is not None]
+            if not peers:
+                raise SlotError(
+                    f"cannot drain engine {engine}: no peer has a free slot")
+            dst = min(peers, key=lambda i: (self.engines[i].active, i))
+            _, _, seconds = self.migrate(info.rid, dst, transfer)
+            moved.append((info.rid, dst, seconds))
+        return moved
+
+    # -- reporting ---------------------------------------------------------
+    def engine_stats(self) -> List[Dict[str, int]]:
+        return [{"engine": e, "active": eng.active, "iters": eng.iters,
+                 "slots_acquired": eng.slot_mgr.acquired,
+                 "slots_released": eng.slot_mgr.released}
+                for e, eng in enumerate(self.engines)]

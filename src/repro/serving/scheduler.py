@@ -72,6 +72,9 @@ class RequestTrace:
     decode_iters: int = 0
     decode_tokens: int = 0   # committed decode tokens (MTP: 1+accepted/iter)
     decode_seconds: float = 0.0
+    decode_engine: int = -1  # pool engine currently decoding the request
+    migrations: int = 0      # cross-engine KV migrations mid-decode
+    migration_seconds: float = 0.0
     tokens_out: int = 0
     shed: bool = False
 
@@ -234,6 +237,10 @@ class DecodeSlotManager:
         self.n_slots = n_slots
         self.capacity = capacity
         self._slots: List[Optional[SlotInfo]] = [None] * n_slots
+        # Lifetime conservation counters (pool invariant: acquired ==
+        # released + active, per engine and summed across a pool).
+        self.acquired = 0
+        self.released = 0
 
     # -- queries -----------------------------------------------------------
     @property
@@ -274,6 +281,7 @@ class DecodeSlotManager:
                 f"rid={rid} needs cache_len={cache_len} > capacity="
                 f"{self.capacity}")
         self._slots[slot] = SlotInfo(rid, cache_len, payload)
+        self.acquired += 1
         return slot
 
     def advance(self, slot: int, n: int = 1) -> int:
@@ -292,6 +300,7 @@ class DecodeSlotManager:
         if info is None:
             raise SlotError(f"release of empty slot {slot}")
         self._slots[slot] = None
+        self.released += 1
         return info
 
 
@@ -537,6 +546,15 @@ class SchedulerConfig:
     # 1+accept tokens per iteration (a decode_cost with explicit MTP terms
     # overrides the paper defaults).
     use_mtp: bool = False
+    # Decode-pool routing policy (serving/pool.py registry). Unlike the
+    # prefill policy this MAY be cache-affine: the UB plane makes any
+    # engine reachable from the shared KV store, so routing to the engine
+    # already holding a request's reusable prefix blocks is pure win.
+    decode_policy: str = "least_loaded_slots"
+    # When > 0, every N pool decode turns the hottest engine drains one
+    # slot's KV to the coldest (cross-engine migration over the RDMA
+    # plane) if the active-slot imbalance is >= 2. 0 disables rebalancing.
+    decode_rebalance_every: int = 0
 
 
 class Scheduler:
@@ -548,11 +566,21 @@ class Scheduler:
     back. Compute stays in the engines; every *decision* lives here.
     """
 
-    def __init__(self, n_prefill: int, slot_mgr: DecodeSlotManager,
-                 config: Optional[SchedulerConfig] = None):
+    def __init__(self, n_prefill: int, slot_mgr, config: Optional[SchedulerConfig] = None):
+        """``slot_mgr`` is one :class:`DecodeSlotManager` (single decode
+        engine) or a sequence of them (one per decode-pool engine); every
+        engine gets its own virtual clock and admission view, reconciled
+        into a single tracker/trace."""
         self.config = config or SchedulerConfig()
         self.n_prefill = n_prefill
-        self.slot_mgr = slot_mgr
+        if isinstance(slot_mgr, DecodeSlotManager):
+            self.slot_mgrs = [slot_mgr]
+        else:
+            self.slot_mgrs = list(slot_mgr)
+            if not self.slot_mgrs:
+                raise ValueError("need at least one decode slot manager")
+        self.slot_mgr = self.slot_mgrs[0]      # single-engine compatibility
+        self.n_decode = len(self.slot_mgrs)
         cost = self.config.decode_cost
         if (self.config.use_mtp and cost.mtp_iter_factor == 1.0
                 and cost.mtp_accept == 0.0):
@@ -575,10 +603,23 @@ class Scheduler:
         self.tracker = SLOTracker()
         self.traces: Dict[int, RequestTrace] = {}
         self._instance_free_at = [0.0] * self.n_prefill
-        self.decode_now = 0.0       # absolute virtual time of the decode pool
+        # One virtual clock per decode engine (engines step concurrently in
+        # reality; each clock advances by its own batch's step cost).
+        self._decode_now = [0.0] * self.n_decode
         self.decode_busy = 0.0      # sum of step costs (excludes idle gaps)
         self.decode_steps = 0
         self.decode_token_count = 0
+        self._eng_busy = [0.0] * self.n_decode
+        self._eng_steps = [0] * self.n_decode
+        self._eng_tokens = [0] * self.n_decode
+        self.migrations = 0
+        self.migration_seconds = 0.0
+
+    @property
+    def decode_now(self) -> float:
+        """Pool frontier: the earliest virtual time any decode engine can
+        take new work (single-engine: the engine clock)."""
+        return min(self._decode_now)
 
     # -- prefill side ------------------------------------------------------
     def on_arrival(self, rid: int, arrival: float,
@@ -621,15 +662,20 @@ class Scheduler:
         trace.transfer_seconds = seconds
 
     # -- decode side -------------------------------------------------------
-    def admission_decision(self, trace: RequestTrace) -> str:
-        return self.gate.decide(self.slot_mgr.active,
-                                self.slot_mgr.free > 0)
+    def admission_decision(self, trace: RequestTrace, engine: int = 0) -> str:
+        """Gate decision against one engine's batch: projected TPOT depends
+        on the batch the request would *join*, which under a pool is the
+        target engine's, not the pool-wide count."""
+        mgr = self.slot_mgrs[engine]
+        return self.gate.decide(mgr.active, mgr.free > 0)
 
-    def on_admit(self, trace: RequestTrace, slot: int) -> None:
-        trace.decode_admit = max(self.decode_now, trace.ready_at)
+    def on_admit(self, trace: RequestTrace, slot: int, engine: int = 0) -> None:
+        trace.decode_admit = max(self._decode_now[engine], trace.ready_at)
+        trace.decode_engine = engine
         # Decode idles until the admitted KV arrives; without this bump a
         # long prefill could yield decode_end < decode_admit in the trace.
-        self.decode_now = max(self.decode_now, trace.decode_admit)
+        self._decode_now[engine] = max(self._decode_now[engine],
+                                       trace.decode_admit)
 
     def on_prefill_only_finish(self, trace: RequestTrace) -> None:
         """Request fully answered by prefill (max_new <= 1): its single
@@ -646,9 +692,9 @@ class Scheduler:
 
     def on_decode_step(self, active_rids: Sequence[int],
                        finished_rids: Sequence[int],
-                       tokens_by_rid: Optional[Dict[int, int]] = None
-                       ) -> float:
-        """Advance the virtual clock by one decode iteration.
+                       tokens_by_rid: Optional[Dict[int, int]] = None,
+                       engine: int = 0) -> float:
+        """Advance one engine's virtual clock by one decode iteration.
 
         The clock is charged per *iteration* (MTP: ×``mtp_iter_factor``)
         while each request is credited the tokens it actually committed —
@@ -656,9 +702,11 @@ class Scheduler:
         active request) — so TPOT traces honestly reflect speculation.
         """
         dt = self.cost.step_time(len(active_rids))
-        self.decode_now += dt
+        self._decode_now[engine] += dt
         self.decode_busy += dt
         self.decode_steps += 1
+        self._eng_busy[engine] += dt
+        self._eng_steps[engine] += 1
         for rid in active_rids:
             tr = self.traces[rid]
             tr.decode_iters += 1
@@ -666,17 +714,78 @@ class Scheduler:
             toks = 1 if tokens_by_rid is None else tokens_by_rid.get(rid, 0)
             tr.decode_tokens += toks
             self.decode_token_count += toks
+            self._eng_tokens[engine] += toks
         for rid in finished_rids:
             tr = self.traces[rid]
-            tr.decode_end = self.decode_now
+            tr.decode_end = self._decode_now[engine]
             self.tracker.record(tr)
             self.router.on_complete(tr.prefill_instance)
         return dt
 
+    def on_migrate(self, trace: RequestTrace, src: int, dst: int,
+                   seconds: float) -> None:
+        """Cross-engine KV migration: the destination engine cannot resume
+        the request before the source clock plus the drain time, so the
+        destination clock is bumped (per-request timelines stay monotone —
+        ``decode_end`` never precedes ``decode_admit``). The drain charge
+        is recorded on the trace (``migration_seconds``), separate from
+        ``decode_seconds``, so TPOT keeps meaning pure decode residency."""
+        self._decode_now[dst] = max(self._decode_now[dst],
+                                    self._decode_now[src] + seconds)
+        trace.decode_engine = dst
+        trace.migrations += 1
+        trace.migration_seconds += seconds
+        self.migrations += 1
+        self.migration_seconds += seconds
+
     def advance_clock(self, t: float) -> None:
         """Open-loop serving: fast-forward the idle decode pool to the next
         arrival/KV-ready event (never rewinds)."""
-        self.decode_now = max(self.decode_now, t)
+        self._decode_now = [max(c, t) for c in self._decode_now]
+
+    def sync_idle_clocks(self, stepped: Sequence[int]) -> None:
+        """Engines that sat idle while peers decoded are idle *now*, not at
+        their last event: pull their clocks up to the busy frontier (the
+        least-advanced stepped engine). Without this, open-loop arrival
+        visibility — gated on ``decode_now = min(clocks)`` — would freeze
+        at an idle engine's stale clock and serialize the pool into
+        bulk-synchronous waves (the idle engine never sees new arrivals
+        until the whole pool drains)."""
+        busy = [self._decode_now[e] for e in stepped]
+        if not busy:
+            return
+        t = min(busy)
+        for e in range(self.n_decode):
+            if e not in stepped:
+                self._decode_now[e] = max(self._decode_now[e], t)
+
+    def feedback_mtp_acceptance(self) -> Optional[float]:
+        """Fold the draft-acceptance rate *measured* by the finished trace
+        back into the decode cost model between serve() waves (ROADMAP:
+        acceptance-rate feedback into ``DecodeCostModel.mtp_accept``).
+
+        ``decode_tokens`` is credited per iteration as 1 + accepted, so the
+        wave's mean acceptance is ``tokens/iters - 1``. The admission gate
+        is rebuilt on the calibrated cost: a high-acceptance wave buys a
+        larger admitted batch next wave (each iteration now provably emits
+        more tokens per unit budget), a low one shrinks it. Returns the
+        measured rate, or None when there is nothing to learn or the
+        measured rate would make a queue-mode budget unsatisfiable."""
+        if not self.config.use_mtp:
+            return None
+        iters = sum(t.decode_iters for t in self.tracker.finished)
+        if iters <= 0:
+            return None
+        toks = sum(t.decode_tokens for t in self.tracker.finished)
+        accept = min(1.0, max(0.0, toks / iters - 1.0))
+        new_cost = dataclasses.replace(self.cost, mtp_accept=accept)
+        try:
+            gate = AdmissionGate(new_cost, self.gate.budget_s,
+                                 self.config.admission)
+        except ValueError:
+            return None
+        self.cost, self.gate = new_cost, gate
+        return accept
 
     def on_finish(self, trace: RequestTrace, tokens_out: int) -> None:
         trace.tokens_out = tokens_out
@@ -696,4 +805,13 @@ class Scheduler:
                                            / self.decode_steps)
         if self.gate.max_batch is not None:
             s["admitted_batch_cap"] = self.gate.max_batch
+        if self.n_decode > 1:
+            makespan = max(max(self._decode_now), 1e-12)
+            s["decode_engines"] = self.n_decode
+            s["migrations"] = self.migrations
+            s["engine_decode_steps"] = list(self._eng_steps)
+            s["engine_decode_tokens"] = list(self._eng_tokens)
+            s["engine_busy_s"] = [round(b, 9) for b in self._eng_busy]
+            s["engine_util"] = [round(b / makespan, 4)
+                                for b in self._eng_busy]
         return s

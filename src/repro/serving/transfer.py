@@ -63,10 +63,23 @@ class KVTransferEngine:
         self.plane = plane
         self.transfers = 0
         self.bytes_moved = 0
+        self.migrations = 0
+        self.bytes_migrated = 0
 
     def transfer(self, cache: Any) -> float:
         nbytes = cache_nbytes(cache)
         dt = self.clock.charge(self.plane, nbytes)
         self.transfers += 1
         self.bytes_moved += nbytes
+        return dt
+
+    def migrate(self, payload: Any) -> float:
+        """Cross-engine decode KV migration rides the same isolated plane
+        as the prefill→decode handoff (it must never contend with decode
+        compute traffic), accounted separately so pool rebalancing cost is
+        visible in benchmarks."""
+        nbytes = cache_nbytes(payload)
+        dt = self.clock.charge(self.plane, nbytes)
+        self.migrations += 1
+        self.bytes_migrated += nbytes
         return dt

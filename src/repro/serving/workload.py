@@ -18,16 +18,18 @@ from repro.serving.engine import Request
 
 
 def poisson_requests(n_requests: int, rate_rps: float, prompt_len: int,
-                     max_new: int, vocab_size: int, *, seed: int = 0,
+                     max_new: int, vocab_size: int, *, seed: int,
                      shared_prefix: int = 0,
                      start: float = 0.0) -> List[Request]:
     """Homogeneous Poisson arrival stream: exponential inter-arrival gaps
     at ``rate_rps`` requests per (virtual) second.
 
     ``shared_prefix`` tokens are common across all prompts so the stream
-    also exercises EMS context-cache reuse under load. Deterministic for a
-    fixed ``seed`` — the scheduler's virtual timeline, and therefore every
-    SLO statistic, is reproducible.
+    also exercises EMS context-cache reuse under load. ``seed`` is a
+    *required* keyword: every arrival gap and prompt token comes from one
+    PRNG seeded with it, so the stream — and therefore the scheduler's
+    virtual timeline and every SLO statistic derived from it — is exactly
+    reproducible across runs (benches replay identical traces).
     """
     if n_requests < 1:
         raise ValueError("n_requests must be positive")

@@ -1,0 +1,375 @@
+"""Decode-pool invariants: routing-policy semantics, pool-wide slot
+conservation, token identity of pooled vs single-engine decode, and
+bitwise cache equality across forced cross-engine KV migrations
+(dense/MLA/MoE)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.mempool import ContextCache, MemoryPool
+from repro.models import decode_step, init_params, prefill
+from repro.models.model import cache_batch_axes
+from repro.serving import (DECODE_ROUTERS, DecodeEngine, DecodePool,
+                           KVTransferEngine, Request, RequestResult,
+                           SchedulerConfig, ServingSystem, SlotError,
+                           make_decode_router)
+from repro.serving import cache_ops
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def stream_requests(n, prompt_len=12, max_new=4, seed=1):
+    rng = np.random.RandomState(seed)
+    return [Request(i, list(rng.randint(0, 100, prompt_len)), max_new)
+            for i in range(n)]
+
+
+def greedy_reference(cfg, params, prompt, n_new):
+    batch = {"tokens": jnp.asarray([prompt], jnp.int32)}
+    logits, caches = prefill(params, cfg, batch,
+                             capacity=len(prompt) + n_new + 4,
+                             cache_dtype=jnp.float32)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    cl = jnp.int32(len(prompt))
+    for _ in range(n_new - 1):
+        lg, caches = decode_step(params, cfg,
+                                 jnp.asarray([[toks[-1]]], jnp.int32),
+                                 caches, cl)
+        toks.append(int(jnp.argmax(lg[0])))
+        cl = cl + 1
+    return toks
+
+
+def slices_bitwise_equal(cfg, a, b):
+    """Bitwise equality of every batched leaf of two request slices."""
+    axes = cache_batch_axes(cfg)
+    oks = jax.tree.leaves(jax.tree.map(
+        lambda x, y, ax: True if ax is None else
+        bool(np.array_equal(np.asarray(x), np.asarray(y))),
+        a, b, axes))
+    return all(oks)
+
+
+# ---------------------------------------------------------------------------
+# Router policy semantics (pure control plane, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_decode_router_registry_and_unknown_policy():
+    assert set(DECODE_ROUTERS) == {"least_loaded_slots", "round_robin",
+                                   "cache_affinity"}
+    with pytest.raises(ValueError, match="unknown decode routing policy"):
+        make_decode_router("least_loaded", 2)    # prefill policy, not pool
+    with pytest.raises(ValueError, match="at least one"):
+        make_decode_router("round_robin", 0)
+
+
+def test_router_select_is_pure_until_commit():
+    """select() never mutates router state: a gated/waiting request that
+    retries gets the same answer; the cursor/affinity map moves only on
+    on_admit (the actual placement)."""
+    rr = make_decode_router("round_robin", 3)
+    assert [rr.select([0, 0, 0], [2, 2, 2]) for _ in range(4)] == [0] * 4
+    rr.on_admit(0)
+    assert rr.select([1, 0, 0], [1, 2, 2]) == 1
+    rr.on_admit(1)
+    rr.on_admit(2)
+    assert rr.select([1, 1, 1], [1, 1, 1]) == 0   # wrapped
+
+    aff = make_decode_router("cache_affinity", 2)
+    keys = ["cc:a", "cc:b"]
+    assert aff.select([0, 0], [2, 2], keys) == 0   # no residency: least id
+    aff.on_admit(1, keys)
+    assert aff.select([0, 5], [2, 2], keys) == 1   # blocks live on engine 1
+    assert aff.select([0, 5], [2, 2], keys) == 1   # …and select stays pure
+    # a full engine is deprioritized even when affinity points at it
+    assert aff.select([0, 5], [2, 0], keys) == 0
+
+
+def test_least_loaded_slots_prefers_free_engines():
+    r = make_decode_router("least_loaded_slots", 3)
+    assert r.select([5, 2, 9], [1, 1, 1]) == 1
+    assert r.select([4, 4, 4], [1, 1, 1]) == 0          # tie → lowest id
+    assert r.select([0, 3, 4], [0, 1, 1]) == 1          # engine 0 is full
+
+
+def test_pool_rejects_heterogeneous_engines(granite):
+    cfg, params = granite
+    a = DecodeEngine(params, cfg, 2, 32)
+    b = DecodeEngine(params, cfg, 2, 48)                # different capacity
+    with pytest.raises(ValueError, match="identical cache layout"):
+        DecodePool([a, b], make_decode_router("round_robin", 2))
+    with pytest.raises(ValueError, match="router sized"):
+        DecodePool([a], make_decode_router("round_robin", 2))
+
+
+# ---------------------------------------------------------------------------
+# Pool-wide slot conservation
+# ---------------------------------------------------------------------------
+
+
+def test_pool_slot_conservation_across_waves(granite):
+    """Slots acquired == released + active, per engine and pool-wide,
+    after every serve() wave — including a wave that sheds."""
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=32, decode_engines=2,
+                           decode_router="least_loaded_slots")
+
+    def check():
+        for mgr in system.pool.slot_mgrs:
+            assert mgr.acquired == mgr.released + mgr.active
+            assert mgr.active == 0          # wave fully drained
+        total_acq = sum(m.acquired for m in system.pool.slot_mgrs)
+        total_rel = sum(m.released for m in system.pool.slot_mgrs)
+        assert total_acq == total_rel + system.pool.active
+
+    results = system.serve(stream_requests(5))
+    assert len(results) == 5
+    check()
+    results = system.serve(stream_requests(4, seed=2))
+    check()
+    # shedding wave: shed requests never acquire a slot, so conservation
+    # still balances
+    system.reconfigure_scheduler(
+        SchedulerConfig(tpot_budget_ms=5.0, admission="shed",
+                        decode_policy="least_loaded_slots"))
+    results = system.serve(stream_requests(6, seed=3))
+    assert any(r.shed for r in results)
+    check()
+
+
+# ---------------------------------------------------------------------------
+# Token identity: pooled == single-engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("router", ["round_robin", "least_loaded_slots"])
+def test_pooled_decode_token_identical_to_single_engine(granite, router):
+    cfg, params = granite
+    reqs = stream_requests(5)
+    single = ServingSystem(params, cfg, n_prefill=2, decode_batch=4,
+                           capacity=32)
+    ref = {r.rid: r.tokens for r in single.serve(
+        [Request(r.rid, list(r.prompt), r.max_new_tokens) for r in reqs])}
+    pooled = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=32, decode_engines=2,
+                           decode_router=router)
+    got = {r.rid: r.tokens for r in pooled.serve(reqs)}
+    assert got == ref
+    # both engines actually decoded something
+    s = pooled.scheduler.summary()
+    assert s["decode_engines"] == 2
+    assert all(t > 0 for t in s["engine_decode_tokens"])
+
+
+def test_pooled_decode_composes_with_chunked_fast_path(granite):
+    """decode_chunk > 1 inside each pool engine stays token-identical."""
+    cfg, params = granite
+    reqs = stream_requests(4, max_new=6)
+    single = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=32)
+    ref = {r.rid: r.tokens for r in single.serve(
+        [Request(r.rid, list(r.prompt), r.max_new_tokens) for r in reqs])}
+    pooled = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=32, decode_engines=2,
+                           decode_router="round_robin", decode_chunk=3)
+    got = {r.rid: r.tokens for r in pooled.serve(reqs)}
+    assert got == ref
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine KV migration: bitwise cache equality, dense/MLA/MoE
+# ---------------------------------------------------------------------------
+
+
+def _manual_pool(cfg, params, capacity, n=2, batch=2):
+    engines = [DecodeEngine(params, cfg, batch, capacity, seed=e)
+               for e in range(n)]
+    return DecodePool(engines, make_decode_router("round_robin", n))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "deepseek-r1", "olmoe-1b-7b"])
+def test_forced_migration_bitwise_cache_equality(arch):
+    """Mid-stream drain into a peer engine: the migrated request's cache
+    rows are bit-identical on the destination, and the continued decode is
+    token-identical to an unmigrated greedy reference."""
+    cfg = smoke(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(3)
+    prompt = list(rng.randint(0, 200, 10))
+    max_new = 6
+    ref = greedy_reference(cfg, params, prompt, max_new)
+
+    pool = _manual_pool(cfg, params, capacity=len(prompt) + max_new + 4)
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([prompt], jnp.int32)},
+                             capacity=pool.capacity, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    res = RequestResult(0, [])
+    slot = pool.engines[0].free_slot()
+    pool.add(0, slot, caches, first, len(prompt), res, max_new)
+
+    # decode two tokens on engine 0, then migrate mid-stream
+    for _ in range(2):
+        pool.engines[0].step()
+    src_snapshot = cache_ops.slice_request(cfg, pool.engines[0].caches, slot)
+    src_len = int(pool.engines[0].cache_len[slot])
+    transfer = KVTransferEngine()
+    src_e, dst_slot, seconds = pool.migrate(0, 1, transfer)
+    assert (src_e, pool.migrations) == (0, 1)
+    assert seconds > 0 and transfer.migrations == 1
+    assert transfer.bytes_migrated == pool.migrated_bytes > 0
+
+    dst = pool.engines[1]
+    dst_slice = cache_ops.slice_request(cfg, dst.caches, dst_slot)
+    assert slices_bitwise_equal(cfg, src_snapshot, dst_slice)
+    assert int(dst.cache_len[dst_slot]) == src_len
+    assert pool.engines[0].active == 0 and dst.active == 1
+
+    # finish on the destination engine: tokens must match the reference
+    while dst.active:
+        dst.step()
+    assert res.tokens == ref
+
+
+def test_migration_error_paths(granite):
+    cfg, params = granite
+    pool = _manual_pool(cfg, params, capacity=24, batch=1)
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([[1, 2, 3, 4]],
+                                                    jnp.int32)},
+                             capacity=24, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    for rid, engine in ((0, 0), (1, 1)):
+        res = RequestResult(rid, [])
+        pool.add(engine, 0, caches, first, 4, res, 4)
+    with pytest.raises(SlotError, match="not resident"):
+        pool.migrate(99, 1)
+    with pytest.raises(ValueError, match="already decodes"):
+        pool.migrate(0, 0)
+    with pytest.raises(SlotError, match="no free slot"):
+        pool.migrate(0, 1)                       # engine 1 is full
+    with pytest.raises(SlotError, match="no peer has a free slot"):
+        pool.drain_engine(0)
+
+
+def test_drain_engine_retires_all_slots(granite):
+    """Engine retirement: every active slot migrates to peers and decode
+    completes correctly on the new engines."""
+    cfg, params = granite
+    pool = _manual_pool(cfg, params, capacity=24, n=3, batch=2)
+    rng = np.random.RandomState(4)
+    prompts = [list(rng.randint(0, 100, 8)) for _ in range(2)]
+    refs, ress = [], []
+    for rid, p in enumerate(prompts):
+        refs.append(greedy_reference(cfg, params, p, 5))
+        logits, caches = prefill(params, cfg,
+                                 {"tokens": jnp.asarray([p], jnp.int32)},
+                                 capacity=24, cache_dtype=jnp.float32)
+        res = RequestResult(rid, [])
+        ress.append(res)
+        pool.add(0, pool.engines[0].free_slot(), caches,
+                 int(jnp.argmax(logits[0, -1])), len(p), res, 5)
+    pool.engines[0].step()
+    moved = pool.drain_engine(0, KVTransferEngine())
+    assert len(moved) == 2 and pool.engines[0].active == 0
+    assert {dst for _, dst, _ in moved} <= {1, 2}
+    while pool.active:
+        for _, eng in enumerate(pool.engines):
+            if eng.active:
+                eng.step()
+    for res, ref in zip(ress, refs):
+        assert res.tokens == ref
+
+
+def test_serving_system_forced_migration_in_trace(granite):
+    """ServingSystem.migrate_request charges the RDMA plane and records the
+    move on the scheduler trace (engine + migration counters)."""
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=32, decode_engines=2,
+                           decode_router="round_robin")
+    req = Request(0, list(np.random.RandomState(5).randint(0, 100, 10)), 6)
+    sched = system.scheduler
+    sched.begin_epoch()
+    tr = sched.on_arrival(0, 0.0, 10)
+    first, caches, res = system.prefills[0].run(req)
+    sched.on_prefill_done(tr, 0, res.computed_tokens, res.reused_tokens)
+    sched.on_transfer(tr, system.transfer.transfer(caches))
+    slot = system.pool.engines[0].free_slot()
+    system.pool.add(0, slot, caches, first, 10, res, 6)
+    sched.on_admit(tr, slot, 0)
+    for e, _, il in system.pool.step_all():
+        for entry in il:
+            sched.on_decode_step(*entry, engine=e)
+    seconds = system.migrate_request(0, 1)
+    assert seconds > 0
+    assert tr.decode_engine == 1 and tr.migrations == 1
+    assert tr.migration_seconds == pytest.approx(seconds)
+    assert system.transfer.migrations == 1
+    # destination clock >= source clock: per-request timeline stays monotone
+    assert sched._decode_now[1] >= sched._decode_now[0] + seconds
+
+
+# ---------------------------------------------------------------------------
+# Rebalancing + EMS-aware routing end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_auto_rebalance_migrates_and_preserves_tokens(granite):
+    """Uneven drain (short requests on one engine) triggers the pool
+    rebalancer, which must not change any generated token."""
+    cfg, params = granite
+    rng = np.random.RandomState(6)
+    # rids 0,2 decode long on engine 0; rids 1,3 finish fast on engine 1
+    # (least_loaded_slots alternates admissions), leaving a >=2 imbalance.
+    reqs = [Request(i, list(rng.randint(0, 100, 10)),
+                    10 if i % 2 == 0 else 2) for i in range(4)]
+    single = ServingSystem(params, cfg, n_prefill=1, decode_batch=4,
+                           capacity=32)
+    ref = {r.rid: r.tokens for r in single.serve(
+        [Request(r.rid, list(r.prompt), r.max_new_tokens) for r in reqs])}
+    pooled = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=32, decode_engines=2,
+                           decode_router="least_loaded_slots",
+                           decode_rebalance_every=1)
+    got = {r.rid: r.tokens for r in pooled.serve(reqs)}
+    assert got == ref
+    s = pooled.scheduler.summary()
+    assert s["migrations"] >= 1
+    assert pooled.pool.migrations == s["migrations"]
+    assert pooled.transfer.migrations == s["migrations"]
+    migrated = [t for t in pooled.scheduler.tracker.finished
+                if t.migrations > 0]
+    assert migrated and all(t.migration_seconds > 0 for t in migrated)
+
+
+def test_cache_affinity_routes_shared_prefix_to_resident_engine(granite):
+    """EMS-aware routing: requests sharing a cached prefix land on the
+    engine already holding those blocks; round_robin spreads them."""
+    cfg, params = granite
+    rng = np.random.RandomState(7)
+    prefix = list(rng.randint(0, 100, 8))
+    reqs = [Request(i, prefix + list(rng.randint(0, 100, 4)), 3)
+            for i in range(2)]
+
+    def run(router):
+        cc = ContextCache(MemoryPool(n_nodes=4), block_tokens=4,
+                          model_tag=cfg.name)
+        system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                               capacity=32, decode_engines=2,
+                               decode_router=router, context_cache=cc)
+        system.serve([Request(r.rid, list(r.prompt), r.max_new_tokens)
+                      for r in reqs])
+        return [system.scheduler.traces[i].decode_engine for i in range(2)]
+
+    assert run("cache_affinity") == [0, 0]       # prefix blocks pin engine 0
+    assert run("round_robin") == [0, 1]
