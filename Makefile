@@ -9,7 +9,7 @@
 PY ?= python
 PYTHONPATH := src
 
-.PHONY: test smoke serve-demo bench-slo bench-smoke ci
+.PHONY: test smoke serve-demo bench-slo bench-smoke bench-check ci
 
 test:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -q
@@ -30,9 +30,24 @@ bench-slo:
 # and BENCH_prefill.json at the repo root for PR-over-PR tracking.
 # bench_mtp runs after bench_decode_throughput: it merges the MTP section
 # (acceptance rate + fused-MTP speedup) into the same BENCH_decode.json.
+# bench-check (its own CI step, and part of `make ci`) asserts the decode
+# artifact is schema 4 with the pool autoscale section (engine-count
+# timeline + scale-event counts) present.
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_mtp --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_prefill_throughput --smoke
 
-ci: smoke test bench-smoke
+bench-check:
+	$(PY) -c "import json; d = json.load(open('BENCH_decode.json')); \
+	assert d['schema'] == 4, f'BENCH_decode.json schema {d[\"schema\"]} != 4'; \
+	a = d['pool']['autoscale']; \
+	assert a['engine_count_timeline'] and 'scale_grows' in a \
+	and 'scale_shrinks' in a, 'autoscale section incomplete'; \
+	assert a['tokens_identical_to_fixed_pool'] is True, \
+	'autoscaled tokens diverged from the fixed-size pool'; \
+	print('BENCH_decode.json schema 4 OK:', \
+	f\"{a['scale_grows']} grows, {a['scale_shrinks']} shrinks, \" \
+	f\"peak {a['peak_engines']} engines\")"
+
+ci: smoke test bench-smoke bench-check

@@ -34,6 +34,9 @@ POOL_ENGINES = 2
 POOL_BATCH = 2
 POOL_REBALANCE_EVERY = 2
 
+# autoscale smoke: Poisson burst through a 1..AUTOSCALE_MAX pool
+AUTOSCALE_MAX = 3
+
 
 def main(smoke: bool = False) -> None:
     print("name,metric,value,derived")
@@ -110,6 +113,7 @@ def _live_rows() -> None:
          round(speedup, 2), "wall_chunk1/wall_chunkN")
     artifact["fastpath_speedup"] = speedup
     artifact["pool"] = _pool_rows()
+    artifact["pool"]["autoscale"] = _autoscale_rows()
     path = write_bench_artifact("decode", artifact)
     emit("decode_tput", "artifact", path, "")
 
@@ -145,6 +149,56 @@ def _pool_rows() -> dict:
         emit("decode_tput", f"pool_{policy}_engine_util",
              "|".join(str(u) for u in s["engine_util"]),
              f"completed={s['completed']}")
+    return section
+
+
+def _autoscale_rows() -> dict:
+    """Decode-pool autoscaling smoke (schema 4): an open-loop Poisson burst
+    through a ``--autoscale``-style pool (min 1, max AUTOSCALE_MAX) — the
+    engine-count timeline, scale-event counts, and the token-identity check
+    against a fixed pool at the max size, persisted so the controller's
+    behaviour on the canonical burst is tracked PR-over-PR."""
+    from benchmarks.common import (AUTOSCALE_MAX_NEW, LIVE_PROMPT_LEN,
+                                   autoscale_burst, live_autoscale_serve,
+                                   live_model)
+    from repro.serving import Request, ServingSystem
+
+    reqs = autoscale_burst()        # ONE stream for both runs
+    results, scheduler, system = live_autoscale_serve(
+        requests=[Request(r.rid, list(r.prompt), r.max_new_tokens,
+                          r.arrival) for r in reqs],
+        max_engines=AUTOSCALE_MAX)
+    s = scheduler.summary()
+    timeline = s.get("engine_count_timeline", [])
+    # fixed-size reference at the max engine count: autoscaling must not
+    # change a single emitted token
+    cfg, params = live_model()
+    fixed = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                          capacity=LIVE_PROMPT_LEN + AUTOSCALE_MAX_NEW + 16,
+                          decode_engines=AUTOSCALE_MAX)
+    ref = {r.rid: r.tokens for r in fixed.serve(
+        [Request(r.rid, list(r.prompt), r.max_new_tokens, r.arrival)
+         for r in reqs], open_loop=True)}
+    identical = {r.rid: r.tokens for r in results} == ref
+    section = {
+        "min_engines": 1, "max_engines": AUTOSCALE_MAX,
+        "completed": s["completed"],
+        "scale_grows": s.get("scale_grows", 0),
+        "scale_shrinks": s.get("scale_shrinks", 0),
+        "engine_count_timeline": timeline,
+        "peak_engines": max((n for _, n in timeline), default=1),
+        "migrations": s.get("migrations", 0),
+        "tokens_identical_to_fixed_pool": identical,
+    }
+    emit("decode_tput", "autoscale_scale_events",
+         f"{section['scale_grows']}grow/{section['scale_shrinks']}shrink",
+         f"peak_engines={section['peak_engines']};"
+         f"final={system.pool.n_live}")
+    emit("decode_tput", "autoscale_engine_count_timeline",
+         "|".join(f"{n}@{t*1e3:.1f}ms" for t, n in timeline),
+         f"migrations={section['migrations']}")
+    emit("decode_tput", "autoscale_tokens_identical_to_fixed_pool",
+         identical, f"fixed_engines={AUTOSCALE_MAX}")
     return section
 
 

@@ -10,7 +10,7 @@ path (``model.decode_loop_mtp`` with the one-forward base+draft verify) on
 the live smoke system, with a draft head distilled against the base model's
 own greedy continuations so acceptance is real rather than chance. Measures
 the acceptance rate and wall-clock tokens/s vs the decode_chunk-only fast
-path, and merges both into BENCH_decode.json (schema 3) so the MTP
+path, and merges both into BENCH_decode.json (schema 4) so the MTP
 trajectory is tracked PR-over-PR."""
 from __future__ import annotations
 

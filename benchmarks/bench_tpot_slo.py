@@ -17,8 +17,9 @@ Two layers, mirroring the repo's methodology:
 from __future__ import annotations
 
 from benchmarks.common import (HBM_BW, emit, ensure_dryrun,
-                               live_poisson_serve, live_pool_serve,
-                               live_smoke_serve, step_time_from_record)
+                               live_autoscale_serve, live_poisson_serve,
+                               live_pool_serve, live_smoke_serve,
+                               step_time_from_record)
 
 ARCH = "deepseek-r1"
 SHAPE = "decode_32k"
@@ -36,6 +37,12 @@ POISSON_BUDGETS = ((None, "queue"), (9.0, "queue"), (9.0, "shed"))
 
 # Decode-pool sweep: 2 engines, per-engine admission gate under this budget.
 POOL_BUDGET_MS = 9.0
+
+# Autoscale: Poisson burst through a 1..AUTOSCALE_MAX pool, with and
+# without a TPOT budget (the budget shrinks the per-engine batch cap the
+# controller sizes against, so it scales out earlier).
+AUTOSCALE_MAX = 3
+AUTOSCALE_BUDGET_MS = 9.0
 
 
 def roofline_rows() -> None:
@@ -141,12 +148,42 @@ def pool_rows() -> None:
          f"bytes={system.pool.migrated_bytes}")
 
 
+def autoscale_rows() -> None:
+    """SLO-driven decode-pool autoscaling under an open-loop Poisson burst:
+    the engine-count timeline the controller drives, the scale-event
+    counts, and — with a TPOT budget — the per-engine gate guarantee
+    holding across every dynamically spawned engine."""
+    for budget in (None, AUTOSCALE_BUDGET_MS):
+        # decode_batch=4: the 9 ms budget caps each engine's batch at 2
+        # (calibrated cost), so the budgeted run scales out earlier than
+        # the slot-limited one — the SLO buying engines, not batch.
+        _, scheduler, system = live_autoscale_serve(
+            max_engines=AUTOSCALE_MAX, tpot_budget_ms=budget,
+            decode_batch=4)
+        s = scheduler.summary()
+        tag = "none" if budget is None else f"{budget:g}ms"
+        timeline = s.get("engine_count_timeline", [])
+        emit("tpot_slo", f"autoscale_{tag}_scale_events",
+             f"{s.get('scale_grows', 0)}grow/{s.get('scale_shrinks', 0)}"
+             "shrink",
+             f"peak_engines={max((n for _, n in timeline), default=1)};"
+             f"final_live={system.pool.n_live}")
+        emit("tpot_slo", f"autoscale_{tag}_engine_count_timeline",
+             "|".join(f"{n}@{t*1e3:.1f}ms" for t, n in timeline),
+             f"completed={s['completed']};migrations={s.get('migrations', 0)}")
+        if budget is not None and s["completed"]:
+            ok = s["tpot_max_s"] * 1e3 <= budget + 1e-9
+            emit("tpot_slo", f"autoscale_{tag}_budget_respected", ok,
+                 "max_trace_tpot<=budget across spawned engines")
+
+
 def main() -> None:
     print("name,metric,value,derived")
     roofline_rows()
     live_scheduler_rows()
     open_loop_rows()
     pool_rows()
+    autoscale_rows()
 
 
 if __name__ == "__main__":

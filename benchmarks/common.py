@@ -64,12 +64,14 @@ def emit(name: str, metric: str, value, derived: str = "") -> None:
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def write_bench_artifact(name: str, payload: Dict, schema: int = 3) -> str:
+def write_bench_artifact(name: str, payload: Dict, schema: int = 4) -> str:
     """Persist a benchmark record as BENCH_<name>.json at the repo root so
     the perf trajectory is trackable PR-over-PR. Schema 2 added the MTP
     section (acceptance rate + speedup) to the decode artifact; schema 3
-    adds the decode-pool section (per-engine throughput + routing policy +
-    migration counts)."""
+    added the decode-pool section (per-engine throughput + routing policy +
+    migration counts); schema 4 adds the pool autoscale section
+    (engine-count timeline + scale-event counts + fixed-pool token
+    identity)."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump({"schema": schema, "bench": name, **payload}, f, indent=1,
@@ -78,7 +80,7 @@ def write_bench_artifact(name: str, payload: Dict, schema: int = 3) -> str:
     return path
 
 
-def update_bench_artifact(name: str, extra: Dict, schema: int = 3) -> str:
+def update_bench_artifact(name: str, extra: Dict, schema: int = 4) -> str:
     """Merge ``extra`` into an existing BENCH_<name>.json (or start a fresh
     one) — benches that contribute sections to a shared artifact (bench_mtp
     -> BENCH_decode.json) use this instead of clobbering it."""
@@ -273,6 +275,46 @@ def live_pool_serve(*, policy: str = "least_loaded_slots",
                         decode_rebalance_every=rebalance_every,
                         decode_cost=calibrated_decode_cost(LIVE_ARCH)))
     results = system.serve(reqs)
+    return results, system.scheduler, system
+
+
+AUTOSCALE_MAX_NEW = 8
+
+
+def autoscale_burst(n_requests: int = 12, rate_rps: float = 400.0,
+                    max_new: int = AUTOSCALE_MAX_NEW, seed: int = 5):
+    """The canonical autoscale bench burst. One definition, shared by the
+    autoscaling run and its fixed-pool token-identity reference, so the
+    two provably serve the same stream."""
+    from repro.serving.workload import poisson_requests
+
+    cfg, _ = live_model()
+    return poisson_requests(n_requests, rate_rps, LIVE_PROMPT_LEN, max_new,
+                            cfg.vocab_size, seed=seed)
+
+
+def live_autoscale_serve(*, requests=None, min_engines: int = 1,
+                         max_engines: int = 3, decode_batch: int = 2,
+                         max_new: int = AUTOSCALE_MAX_NEW,
+                         tpot_budget_ms=None):
+    """Open-loop burst (default: :func:`autoscale_burst`) through an
+    *autoscaling* decode pool; returns (results, scheduler, system). Not
+    cached: autoscaling mutates the pool's engine roster, so every call
+    builds a fresh system (smoke engines are cheap) — determinism of the
+    scale-event sequence is part of what the benches report."""
+    from repro.serving import SchedulerConfig, ServingSystem
+
+    cfg, params = live_model()
+    reqs = autoscale_burst(max_new=max_new) if requests is None else requests
+    system = ServingSystem(
+        params, cfg, n_prefill=2, decode_batch=decode_batch,
+        capacity=LIVE_PROMPT_LEN + max_new + 16,
+        decode_engines=min_engines, autoscale=True,
+        min_engines=min_engines, max_engines=max_engines,
+        tpot_budget_ms=tpot_budget_ms,
+        scheduler_config=SchedulerConfig(
+            decode_cost=calibrated_decode_cost(LIVE_ARCH)))
+    results = system.serve(reqs, open_loop=True)
     return results, system.scheduler, system
 
 

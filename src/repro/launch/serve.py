@@ -6,6 +6,7 @@
       [--policy least_loaded|round_robin|queue_depth] \
       [--decode-engines 2 --decode-router least_loaded_slots|round_robin|\
        cache_affinity [--rebalance-every 4]] \
+      [--autoscale --min-engines 1 --max-engines 4] \
       [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
       [--decode-chunk 4] [--prefill-chunk 32] \
       [--poisson-rate 100 [--open-loop]] [--seed 0] [--trace]
@@ -61,6 +62,14 @@ def main() -> None:
                     help="every N decode turns, migrate one request's KV "
                          "from the hottest pool engine to the coldest "
                          "(0 = off)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="grow/shrink the decode pool between decode turns "
+                         "(deterministic SLO-driven controller; "
+                         "--decode-engines is the initial size)")
+    ap.add_argument("--min-engines", type=int, default=1,
+                    help="autoscaler lower clamp on live decode engines")
+    ap.add_argument("--max-engines", type=int, default=4,
+                    help="autoscaler upper clamp on live decode engines")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed for the synthetic request stream "
                          "(identical seed => identical trace)")
@@ -127,6 +136,11 @@ def main() -> None:
                            decode_engines=args.decode_engines,
                            decode_router=args.decode_router,
                            decode_rebalance_every=args.rebalance_every,
+                           autoscale=args.autoscale or None,
+                           min_engines=args.min_engines if args.autoscale
+                           else None,
+                           max_engines=args.max_engines if args.autoscale
+                           else None,
                            context_cache=cc, use_mtp=args.mtp,
                            mtp_params=mtp_params, mtp_fused=args.mtp_fused,
                            policy=args.policy,
@@ -150,14 +164,23 @@ def main() -> None:
     print("SLO summary (virtual clock): "
           + ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in summary.items()))
-    if args.decode_engines > 1:
+    if args.decode_engines > 1 or system.pool.n > 1:
         util = summary.get("engine_util", [])
         print("decode pool: " + ", ".join(
             f"engine{st['engine']} active={st['active']} "
             f"iters={st['iters']} util={util[st['engine']] if util else 0}"
+            + ("" if st["live"] else " (parked)")
             for st in system.pool.engine_stats()))
         print(f"migrations: {system.pool.migrations} "
               f"({system.pool.migrated_bytes/2**20:.2f} MiB over RDMA plane)")
+    if args.autoscale:
+        sched = system.scheduler
+        print("autoscale: "
+              + (" -> ".join(f"{n}@{t*1e3:.1f}ms" for t, n
+                             in sched.engine_count_timeline)
+                 if sched.scale_events else "no scale events")
+              + f" ({len(sched.scale_events)} events, live engines "
+              f"{system.pool.n_live}/{system.pool.n})")
     if args.prefill_chunk:
         calls = sum(e.continue_calls for e in system.prefills)
         widths = set().union(*(e.continue_widths for e in system.prefills))

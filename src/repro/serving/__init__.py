@@ -29,6 +29,7 @@ from repro.serving.pool import (  # noqa: F401
     DecodePool,
     DecodePoolRouter,
     LeastLoadedSlotsRouter,
+    PoolAutoscaler,
     PoolRoundRobinRouter,
     make_decode_router,
 )

@@ -34,7 +34,7 @@ from repro.core import mtp as mtp_mod
 from repro.mempool.context_cache import ContextCache
 from repro.models import model as model_mod
 from repro.serving import cache_ops
-from repro.serving.pool import DecodePool, make_decode_router
+from repro.serving.pool import DecodePool, PoolAutoscaler, make_decode_router
 from repro.serving.scheduler import (
     DecodeSlotManager,
     MicrobatchInterleaver,
@@ -572,10 +572,14 @@ class ServingSystem:
     microbatches per step. ``decode_engines`` > 1 builds a
     :class:`~repro.serving.pool.DecodePool` of identical engines behind a
     ``decode_router`` policy (``least_loaded_slots``, ``round_robin``,
-    ``cache_affinity``) with cross-engine KV migration. Pass a full
-    :class:`SchedulerConfig` as ``scheduler_config`` to override cost-model
-    constants; explicitly passed scheduling kwargs still win over the
-    provided config.
+    ``cache_affinity``) with cross-engine KV migration. ``autoscale=True``
+    (with ``min_engines``/``max_engines`` clamps) lets a deterministic
+    :class:`~repro.serving.pool.PoolAutoscaler` grow the pool mid-wave
+    (fresh engine spawn, or revival of a parked one) and shrink it through
+    migration-backed retirement; ``decode_engines`` is then the *initial*
+    pool size. Pass a full :class:`SchedulerConfig` as ``scheduler_config``
+    to override cost-model constants; explicitly passed scheduling kwargs
+    still win over the provided config.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_prefill: int = 2,
@@ -583,6 +587,9 @@ class ServingSystem:
                  decode_engines: int = 1,
                  decode_router: Optional[str] = None,
                  decode_rebalance_every: Optional[int] = None,
+                 autoscale: Optional[bool] = None,
+                 min_engines: Optional[int] = None,
+                 max_engines: Optional[int] = None,
                  context_cache: Optional[ContextCache] = None,
                  use_mtp: bool = False, mtp_params=None,
                  mtp_fused: bool = False, moe_fn=None,
@@ -601,6 +608,8 @@ class ServingSystem:
             ("decode_chunk", decode_chunk),
             ("decode_policy", decode_router),
             ("decode_rebalance_every", decode_rebalance_every),
+            ("autoscale", autoscale),
+            ("min_engines", min_engines), ("max_engines", max_engines),
         ) if v is not None}
         # use_mtp is engine state, not policy: the scheduler's MTP cost
         # accounting must always match what the decode engine actually runs
@@ -609,19 +618,32 @@ class ServingSystem:
         overrides["use_mtp"] = bool(use_mtp)
         sched_cfg = dataclasses.replace(
             scheduler_config or SchedulerConfig(), **overrides)
+        if sched_cfg.autoscale and not (
+                sched_cfg.min_engines <= decode_engines
+                <= sched_cfg.max_engines):
+            raise ValueError(
+                f"decode_engines={decode_engines} must start inside the "
+                f"autoscale clamp [{sched_cfg.min_engines}, "
+                f"{sched_cfg.max_engines}]")
         self.prefills = [PrefillEngine(params, cfg, capacity, context_cache,
                                        i, moe_fn, prefill_chunk=prefill_chunk)
                          for i in range(n_prefill)]
-        engines = [DecodeEngine(params, cfg, decode_batch, capacity,
-                                moe_fn, use_mtp, mtp_params, seed=e,
+
+        def engine_factory(seed: int) -> DecodeEngine:
+            # The autoscaler's grow path: a fresh engine identical to the
+            # pool's (same jit config), seeded by its engine id.
+            return DecodeEngine(params, cfg, decode_batch, capacity,
+                                moe_fn, use_mtp, mtp_params, seed=seed,
                                 interleave=sched_cfg.interleave_microbatches,
                                 n_micro=sched_cfg.n_micro,
                                 decode_chunk=sched_cfg.decode_chunk,
                                 mtp_fused=mtp_fused)
-                   for e in range(decode_engines)]
+
+        engines = [engine_factory(e) for e in range(decode_engines)]
         self.pool = DecodePool(
             engines, make_decode_router(sched_cfg.decode_policy,
-                                        decode_engines))
+                                        decode_engines),
+            engine_factory=engine_factory)
         self.decode = engines[0]       # single-engine compatibility alias
         self.transfer = KVTransferEngine()
         self.scheduler = Scheduler(n_prefill, self.pool.slot_mgrs, sched_cfg)
@@ -655,6 +677,11 @@ class ServingSystem:
                                                   self.pool.n)
         self.scheduler = Scheduler(len(self.prefills), self.pool.slot_mgrs,
                                    scheduler_config)
+        # Engine liveness is pool state: carry parked engines into the
+        # fresh scheduler's views.
+        for e, live in enumerate(self.pool.live_mask):
+            if not live:
+                self.scheduler.set_engine_live(e, False)
 
     def migrate_request(self, rid: int, dst_engine: int) -> float:
         """Force a cross-engine KV migration of an in-flight request (the
@@ -665,6 +692,52 @@ class ServingSystem:
         if trace is not None:
             self.scheduler.on_migrate(trace, src_e, dst_engine, seconds)
         return seconds
+
+    def _make_autoscaler(self) -> Optional[PoolAutoscaler]:
+        """One PoolAutoscaler per serve() wave, built from the scheduler's
+        *current* config and cost model (MTP feedback may have recalibrated
+        the cost between waves — the controller must project TPOT with the
+        same model the admission gate enforces)."""
+        cfg = self.scheduler.config
+        if not cfg.autoscale:
+            return None
+        return PoolAutoscaler(
+            self.scheduler.cost, self.pool.engines[0].slot_mgr.n_slots,
+            cfg.min_engines, cfg.max_engines,
+            tpot_budget_s=self.scheduler.gate.budget_s,
+            grow_patience=cfg.autoscale_grow_patience,
+            shrink_patience=cfg.autoscale_shrink_patience,
+            cooldown=cfg.autoscale_cooldown)
+
+    def _autoscale_tick(self, scaler: Optional[PoolAutoscaler],
+                        queue_depth: int) -> None:
+        """One controller evaluation between decode turns: apply a grow
+        (spawn or revive an engine, register/warm its scheduler views) or a
+        shrink (atomic migration-backed retirement, every move stamped on
+        the trace), and record the scale event on the virtual timeline."""
+        if scaler is None:
+            return
+        sched, pool = self.scheduler, self.pool
+        # Shrink victim: fewest active slots; ties retire the
+        # latest-spawned engine so engine 0 stays the stable anchor.
+        victim = min(pool.live_ids,
+                     key=lambda i: (pool.engines[i].active, -i))
+        shrinkable = pool.n_live > 1 and pool.can_drain(victim)
+        decision = scaler.decide(pool.n_live, pool.active, queue_depth,
+                                 shrinkable=shrinkable)
+        if decision == "grow":
+            engine, revived = pool.spawn_engine()
+            if revived:
+                sched.set_engine_live(engine, True)
+            else:
+                sched.register_engine(pool.engines[engine].slot_mgr)
+            sched.record_scale_event("grow", engine)
+        elif decision == "shrink":
+            moved = pool.retire_engine(victim, self.transfer)
+            for rid, dst, seconds in moved:
+                sched.on_migrate(sched.traces[rid], victim, dst, seconds)
+            sched.set_engine_live(victim, False)
+            sched.record_scale_event("shrink", victim)
 
     def serve(self, requests: List[Request],
               open_loop: bool = False) -> List[RequestResult]:
@@ -677,6 +750,7 @@ class ServingSystem:
         everything immediately)."""
         sched = self.scheduler
         sched.begin_epoch()            # rids may repeat across serve() waves
+        scaler = self._make_autoscaler()
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         results: List[RequestResult] = []
         waiting: List[_PendingAdmission] = []
@@ -782,6 +856,21 @@ class ServingSystem:
                         rid, src_e, dst_e, seconds = moved
                         sched.on_migrate(sched.traces[rid], src_e, dst_e,
                                          seconds)
+                # Autoscale between decode turns: demand = resident slots
+                # + the admissions the gate is holding right now. Open
+                # loop, a waiting request whose KV is still in flight
+                # (ready_at in the future) is NOT queue pressure yet — no
+                # engine could serve it, so spawning for it would buy an
+                # idle engine and churn the pool.
+                if scaler is not None:
+                    if open_loop:
+                        now = sched.decode_now + eps
+                        queued = sum(
+                            1 for item in waiting
+                            if sched.traces[item.result.rid].ready_at <= now)
+                    else:
+                        queued = len(waiting)
+                    self._autoscale_tick(scaler, queued)
             elif open_loop and (pending or waiting):
                 # Decode pool idle with future work: fast-forward the
                 # virtual clock to the next event that can actually

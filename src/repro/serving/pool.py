@@ -23,12 +23,24 @@ of :class:`~repro.serving.engine.DecodeEngine`:
   buffer, charged to the RDMA-plane transfer engine, and re-inserted
   bit-exactly into a peer engine — the mechanism behind hot-pool
   rebalancing and engine retirement.
+* :class:`PoolAutoscaler` — deterministic grow/hold/shrink controller for
+  the decode pool (the paper's independent decode-pool scaling): between
+  decode turns it compares demand (active slots + admission-queue depth)
+  against the per-engine batch the TPOT budget admits
+  (:meth:`DecodeCostModel.max_batch_for`) and, with hysteresis, asks the
+  pool to spawn a fresh engine or retire one via migration-backed
+  :meth:`DecodePool.retire_engine`.
+
+The pool distinguishes **live** and **parked** engines: retirement drains
+an engine's slots to live peers and parks it (the jitted programs stay
+warm), and a later grow revives the lowest parked engine before paying
+for a new one — so scale oscillation never re-compiles.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.serving.scheduler import SlotError
+from repro.serving.scheduler import DecodeCostModel, SlotError
 
 
 # ---------------------------------------------------------------------------
@@ -42,6 +54,9 @@ class DecodePoolRouter:
     ``select`` sees per-engine active/free slot counts plus the request's
     EMS block keys, and must be pure and deterministic; state transitions
     happen only in ``on_admit`` (called when the placement commits).
+    ``candidates`` restricts the choice to the pool's *live* engines
+    (autoscaling parks retired engines in place, so engine ids are stable
+    but not all of them are eligible); omitted means every engine.
     """
 
     name = "base"
@@ -53,13 +68,38 @@ class DecodePoolRouter:
             raise ValueError("need at least one decode engine")
         self.n = n_engines
 
+    def resize(self, n_engines: int) -> None:
+        """The pool spawned engines: ids ``[old_n, n_engines)`` now exist."""
+        if n_engines < self.n:
+            raise ValueError(
+                "pool engine ids never disappear (retired engines are "
+                f"parked, not removed): cannot resize {self.n} -> {n_engines}")
+        self.n = n_engines
+
+    def _candidates(self,
+                    candidates: Optional[Sequence[int]]) -> List[int]:
+        cands = list(range(self.n)) if candidates is None else list(candidates)
+        if not cands:
+            raise ValueError("no live decode engine to route to")
+        return cands
+
     def select(self, active: Sequence[int], free: Sequence[int],
-               block_keys: Sequence[str] = ()) -> int:
+               block_keys: Sequence[str] = (),
+               candidates: Optional[Sequence[int]] = None) -> int:
         raise NotImplementedError
 
     def on_admit(self, engine: int,
                  block_keys: Sequence[str] = ()) -> None:  # pragma: no cover
         """Notification that a routed request was actually placed."""
+
+    def on_retire(self, engine: int) -> None:  # pragma: no cover - hook
+        """Notification that ``engine`` was drained and parked."""
+
+    def residency(self, engine: int, block_keys: Sequence[str]) -> int:
+        """How many of ``block_keys`` this router believes are resident on
+        ``engine`` (0 for locality-free policies) — the rebalancer's signal
+        for picking migration victims that will not thrash affinity."""
+        return 0
 
 
 class LeastLoadedSlotsRouter(DecodePoolRouter):
@@ -69,14 +109,18 @@ class LeastLoadedSlotsRouter(DecodePoolRouter):
     name = "least_loaded_slots"
 
     def select(self, active: Sequence[int], free: Sequence[int],
-               block_keys: Sequence[str] = ()) -> int:
-        return min(range(self.n), key=lambda i: (free[i] <= 0, active[i], i))
+               block_keys: Sequence[str] = (),
+               candidates: Optional[Sequence[int]] = None) -> int:
+        return min(self._candidates(candidates),
+                   key=lambda i: (free[i] <= 0, active[i], i))
 
 
 class PoolRoundRobinRouter(DecodePoolRouter):
     """Strict cyclic assignment in admission order. The cursor advances on
     *commit* (``on_admit``), so a request the gate holds retries the same
-    engine — deterministic for a fixed request stream."""
+    engine — deterministic for a fixed request stream. With parked engines
+    the cycle runs over the live ids (first live id at or after the
+    cursor)."""
 
     name = "round_robin"
 
@@ -85,8 +129,13 @@ class PoolRoundRobinRouter(DecodePoolRouter):
         self._next = 0
 
     def select(self, active: Sequence[int], free: Sequence[int],
-               block_keys: Sequence[str] = ()) -> int:
-        return self._next
+               block_keys: Sequence[str] = (),
+               candidates: Optional[Sequence[int]] = None) -> int:
+        cands = self._candidates(candidates)
+        for i in cands:
+            if i >= self._next:
+                return i
+        return cands[0]                      # wrap past the highest live id
 
     def on_admit(self, engine: int,
                  block_keys: Sequence[str] = ()) -> None:
@@ -117,15 +166,26 @@ class CacheAffinityRouter(DecodePoolRouter):
         return scores
 
     def select(self, active: Sequence[int], free: Sequence[int],
-               block_keys: Sequence[str] = ()) -> int:
+               block_keys: Sequence[str] = (),
+               candidates: Optional[Sequence[int]] = None) -> int:
         scores = self.score(block_keys)
-        return min(range(self.n),
+        return min(self._candidates(candidates),
                    key=lambda i: (free[i] <= 0, -scores[i], active[i], i))
 
     def on_admit(self, engine: int,
                  block_keys: Sequence[str] = ()) -> None:
         for k in block_keys:
             self._resident[k] = engine
+
+    def on_retire(self, engine: int) -> None:
+        # A parked engine's cache rows are dead: routing future requests
+        # toward it by stale residency would fight the live mask.
+        self._resident = {k: e for k, e in self._resident.items()
+                          if e != engine}
+
+    def residency(self, engine: int, block_keys: Sequence[str]) -> int:
+        return sum(1 for k in block_keys
+                   if self._resident.get(k) == engine)
 
 
 DECODE_ROUTERS = {r.name: r for r in
@@ -153,9 +213,16 @@ class DecodePool:
     Engines must be homogeneous (same model config and KV capacity) so a
     migrated cache payload lands on an identical layout. Compute stays in
     the engines; the pool only routes, steps, and moves KV.
+
+    ``engine_factory`` (seed -> DecodeEngine) enables the autoscaling grow
+    path: :meth:`spawn_engine` revives the lowest parked engine when one
+    exists (retirement parks engines in place, so engine ids — and every
+    per-engine scheduler view keyed on them — stay stable) and otherwise
+    constructs a fresh engine mid-wave.
     """
 
-    def __init__(self, engines: Sequence, router: DecodePoolRouter):
+    def __init__(self, engines: Sequence, router: DecodePoolRouter,
+                 engine_factory: Optional[Callable] = None):
         engines = list(engines)
         if not engines:
             raise ValueError("need at least one decode engine")
@@ -163,20 +230,38 @@ class DecodePool:
             raise ValueError(
                 f"router sized for {router.n} engines, pool has "
                 f"{len(engines)}")
-        if len({e.capacity for e in engines}) != 1 or \
-                len({e.cfg.name for e in engines}) != 1:
+        self._assert_homogeneous(engines)
+        self.engines = engines
+        self.router = router
+        self.engine_factory = engine_factory
+        self._live = [True] * len(engines)
+        self._request_keys: Dict[int, Tuple[str, ...]] = {}
+        self.migrations = 0
+        self.migrated_bytes = 0
+
+    @staticmethod
+    def _assert_homogeneous(engines: Sequence) -> None:
+        if len({(e.capacity, e.cfg.name) for e in engines}) != 1:
             raise ValueError(
                 "pool engines must share model config and KV capacity "
                 "(migration payloads assume an identical cache layout)")
-        self.engines = engines
-        self.router = router
-        self.migrations = 0
-        self.migrated_bytes = 0
 
     # -- aggregate views ---------------------------------------------------
     @property
     def n(self) -> int:
         return len(self.engines)
+
+    @property
+    def n_live(self) -> int:
+        return sum(self._live)
+
+    @property
+    def live_ids(self) -> List[int]:
+        return [i for i, live in enumerate(self._live) if live]
+
+    @property
+    def live_mask(self) -> List[bool]:
+        return list(self._live)
 
     @property
     def active(self) -> int:
@@ -206,29 +291,70 @@ class DecodePool:
     def select_engine(self, block_keys: Sequence[str] = ()) -> int:
         return self.router.select([e.active for e in self.engines],
                                   [e.slot_mgr.free for e in self.engines],
-                                  block_keys)
+                                  block_keys, candidates=self.live_ids)
 
     def add(self, engine: int, slot: int, req_cache, first_token: int,
             prompt_len: int, result, max_new: int,
             block_keys: Sequence[str] = ()) -> None:
         """Place a prefilled request on ``engine`` and commit the routing
         decision (router state mutates only here)."""
+        if not self._live[engine]:
+            raise SlotError(f"engine {engine} is parked (retired)")
         self.engines[engine].add(slot, req_cache, first_token, prompt_len,
                                  result, max_new)
+        if block_keys:
+            self._request_keys[result.rid] = tuple(block_keys)
         self.router.on_admit(engine, block_keys)
 
     # -- stepping ----------------------------------------------------------
     def step_all(self) -> List[Tuple[int, list, list]]:
-        """One decode turn across the pool: every engine with active slots
-        runs one host-sync chunk. Returns ``(engine, finished, iter_log)``
-        per stepped engine, in engine order, so the scheduler can charge
-        each engine's virtual clock independently."""
+        """One decode turn across the pool: every live engine with active
+        slots runs one host-sync chunk. Returns ``(engine, finished,
+        iter_log)`` per stepped engine, in engine order, so the scheduler
+        can charge each engine's virtual clock independently."""
         out = []
         for e, eng in enumerate(self.engines):
-            if eng.active:
+            if self._live[e] and eng.active:
                 finished, iter_log = eng.step_chunk()
+                for r in finished:
+                    self._request_keys.pop(r.rid, None)
                 out.append((e, finished, iter_log))
         return out
+
+    # -- engine lifecycle (autoscaling) ------------------------------------
+    def spawn_engine(self) -> Tuple[int, bool]:
+        """Grow the pool by one live engine. Returns ``(engine, revived)``:
+        the lowest parked engine is revived when one exists (its jitted
+        programs are already warm; its drained slots are empty), otherwise
+        ``engine_factory`` builds a fresh engine whose id extends the pool
+        (never reindexing peers)."""
+        for e, live in enumerate(self._live):
+            if not live:
+                self._live[e] = True
+                return e, True
+        if self.engine_factory is None:
+            raise RuntimeError(
+                "pool has no engine_factory; cannot spawn a new engine")
+        eng = self.engine_factory(self.n)
+        self._assert_homogeneous([self.engines[0], eng])
+        self.engines.append(eng)
+        self._live.append(True)
+        self.router.resize(self.n)
+        return self.n - 1, False
+
+    def retire_engine(self, engine: int, transfer=None
+                      ) -> List[Tuple[int, int, float]]:
+        """Shrink the pool: atomically drain ``engine`` to its live peers
+        and park it (the engine object — and its id — survive for a later
+        revival). Returns the drain's ``(rid, dst, seconds)`` moves."""
+        if not self._live[engine]:
+            raise ValueError(f"engine {engine} is already parked")
+        if self.n_live <= 1:
+            raise ValueError("cannot retire the last live engine")
+        moved = self.drain_engine(engine, transfer)
+        self._live[engine] = False
+        self.router.on_retire(engine)
+        return moved
 
     # -- cross-engine KV migration ----------------------------------------
     def migrate(self, rid: int, dst_engine: int,
@@ -250,6 +376,10 @@ class DecodePool:
                 f"rid={rid} already decodes on engine {dst_engine}")
         if not 0 <= dst_engine < self.n:
             raise ValueError(f"no engine {dst_engine} in a pool of {self.n}")
+        if not self._live[dst_engine]:
+            raise SlotError(
+                f"engine {dst_engine} is parked (retired); cannot migrate "
+                f"rid={rid} onto it")
         src, dst = self.engines[src_e], self.engines[dst_engine]
         dst_slot = dst.slot_mgr.free_slot()
         if dst_slot is None:
@@ -266,36 +396,60 @@ class DecodePool:
 
     def rebalance(self, transfer=None
                   ) -> Optional[Tuple[int, int, int, float]]:
-        """Migrate one request from the hottest engine to the coldest when
-        the active-slot imbalance is >= 2 and the coldest has room — the
-        pool-level rebalancing that keeps per-engine batches (and therefore
-        per-engine TPOT) even. Deterministic: lowest engine ids win ties,
-        the hottest engine's lowest-numbered active slot moves. Returns
+        """Migrate one request from the hottest live engine to the coldest
+        when the active-slot imbalance is >= 2 and the coldest has room —
+        the pool-level rebalancing that keeps per-engine batches (and
+        therefore per-engine TPOT) even. Deterministic: lowest engine ids
+        win ties. The victim is the hottest engine's lowest-numbered active
+        slot **without block residency on that engine** (per the router's
+        affinity map): migrating a request off the engine that holds its
+        cached prefix blocks would make the ``cache_affinity`` router fight
+        the move on the very next shared-prefix admission. Returns
         (rid, src_engine, dst_engine, seconds) or None."""
-        act = [e.active for e in self.engines]
-        hot = min(range(self.n), key=lambda i: (-act[i], i))
-        cold = min(range(self.n), key=lambda i: (act[i], i))
+        live = self.live_ids
+        if len(live) < 2:
+            return None
+        act = [self.engines[i].active for i in range(self.n)]
+        hot = min(live, key=lambda i: (-act[i], i))
+        cold = min(live, key=lambda i: (act[i], i))
         if act[hot] - act[cold] < 2 \
                 or self.engines[cold].slot_mgr.free_slot() is None:
             return None
-        _, info = next(self.engines[hot].slot_mgr.active_slots())
+        slots = list(self.engines[hot].slot_mgr.active_slots())
+        _, info = min(slots, key=lambda si: (self.router.residency(
+            hot, self._request_keys.get(si[1].rid, ())) > 0, si[0]))
         rid = info.rid
         src_e, _, seconds = self.migrate(rid, cold, transfer)
         return rid, src_e, cold, seconds
 
+    def peer_free_slots(self, engine: int) -> int:
+        """Aggregate free slots across ``engine``'s live peers — the
+        capacity a drain must fit into to be all-or-nothing."""
+        return sum(self.engines[i].slot_mgr.free for i in self.live_ids
+                   if i != engine)
+
+    def can_drain(self, engine: int) -> bool:
+        return self.engines[engine].active <= self.peer_free_slots(engine)
+
     def drain_engine(self, engine: int, transfer=None
                      ) -> List[Tuple[int, int, float]]:
-        """Retire an engine: migrate every active slot to peers with free
-        capacity (least-loaded first). Returns one (rid, dst, seconds) per
-        moved request; raises :class:`SlotError` when the peers cannot
-        absorb the load."""
+        """Retire an engine's load: migrate every active slot to live peers
+        with free capacity (least-loaded first). All-or-nothing: aggregate
+        peer free capacity is pre-checked, so the drain either moves every
+        request or raises :class:`SlotError` having moved none (a raise
+        after a partial drain would leave an engine half-retired with no
+        way to tell which requests moved)."""
+        victims = list(self.engines[engine].slot_mgr.active_slots())
+        headroom = self.peer_free_slots(engine)
+        if len(victims) > headroom:
+            raise SlotError(
+                f"cannot drain engine {engine}: {len(victims)} active "
+                f"requests but live peers have only {headroom} free slots "
+                "(drain is all-or-nothing; nothing was migrated)")
         moved = []
-        for _, info in list(self.engines[engine].slot_mgr.active_slots()):
-            peers = [i for i in range(self.n) if i != engine
+        for _, info in victims:
+            peers = [i for i in self.live_ids if i != engine
                      and self.engines[i].slot_mgr.free_slot() is not None]
-            if not peers:
-                raise SlotError(
-                    f"cannot drain engine {engine}: no peer has a free slot")
             dst = min(peers, key=lambda i: (self.engines[i].active, i))
             _, _, seconds = self.migrate(info.rid, dst, transfer)
             moved.append((info.rid, dst, seconds))
@@ -303,7 +457,105 @@ class DecodePool:
 
     # -- reporting ---------------------------------------------------------
     def engine_stats(self) -> List[Dict[str, int]]:
-        return [{"engine": e, "active": eng.active, "iters": eng.iters,
+        return [{"engine": e, "live": self._live[e], "active": eng.active,
+                 "iters": eng.iters,
                  "slots_acquired": eng.slot_mgr.acquired,
                  "slots_released": eng.slot_mgr.released}
                 for e, eng in enumerate(self.engines)]
+
+
+# ---------------------------------------------------------------------------
+# SLO-driven utilization controller
+# ---------------------------------------------------------------------------
+
+
+class PoolAutoscaler:
+    """Deterministic grow/hold/shrink controller for the decode pool.
+
+    Evaluated between decode turns on pure control-plane signals — no
+    wall clock, no randomness — so a fixed request stream always produces
+    the same scale-event sequence:
+
+    * **demand** = pool-wide active slots + admission-queue depth (the
+      requests that would decode right now if capacity allowed);
+    * **per-engine cap** = the largest batch one engine may carry: its
+      slot count, intersected with the batch whose projected per-token
+      TPOT meets the budget (:meth:`DecodeCostModel.max_batch_for` — the
+      same projection the admission gate enforces).
+
+    Grow when demand exceeds what the live engines can carry at the SLO
+    cap (spreading the demand over N engines would push projected TPOT
+    past the budget, so the gate is queuing); shrink when N-1 engines
+    could absorb the whole demand at the cap and nothing is queued. Both
+    need the condition to hold for ``grow_patience`` / ``shrink_patience``
+    consecutive turns, and every scale event starts a ``cooldown`` during
+    which the controller holds (and its streaks reset) — the hysteresis
+    that keeps a demand level sitting exactly on a threshold from flapping
+    the pool. Never emits grow and shrink for the same turn by
+    construction (one decision per ``decide``; the conditions are
+    mutually exclusive for any cap >= 1).
+    """
+
+    def __init__(self, cost: DecodeCostModel, n_slots: int,
+                 min_engines: int, max_engines: int,
+                 tpot_budget_s: Optional[float] = None,
+                 grow_patience: int = 1, shrink_patience: int = 3,
+                 cooldown: int = 2):
+        if n_slots < 1:
+            raise ValueError("n_slots must be positive")
+        if not 1 <= min_engines <= max_engines:
+            raise ValueError(
+                f"need 1 <= min_engines <= max_engines, got "
+                f"[{min_engines}, {max_engines}]")
+        if grow_patience < 1 or shrink_patience < 1 or cooldown < 0:
+            raise ValueError("patience must be >= 1 and cooldown >= 0")
+        self.engine_cap = n_slots
+        if tpot_budget_s is not None:
+            self.engine_cap = min(n_slots,
+                                  max(1, cost.max_batch_for(tpot_budget_s)))
+        self.min_engines = min_engines
+        self.max_engines = max_engines
+        self.grow_patience = grow_patience
+        self.shrink_patience = shrink_patience
+        self.cooldown = cooldown
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh hysteresis state (one serve() wave = one controller run)."""
+        self._grow_streak = 0
+        self._shrink_streak = 0
+        self._cooldown_left = 0
+
+    def decide(self, n_live: int, active: int, queue_depth: int,
+               shrinkable: bool = True) -> str:
+        """'grow' | 'hold' | 'shrink' for this decode turn.
+
+        ``shrinkable`` is the pool's atomic-drain pre-check for the would-be
+        victim (``DecodePool.can_drain``): a shrink the peers cannot absorb
+        is reported as hold (the shrink streak resets; no cooldown is
+        spent on it).
+        """
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            self._grow_streak = self._shrink_streak = 0
+            return "hold"
+        demand = active + queue_depth
+        if demand > n_live * self.engine_cap and n_live < self.max_engines:
+            self._shrink_streak = 0
+            self._grow_streak += 1
+            if self._grow_streak >= self.grow_patience:
+                self._grow_streak = 0
+                self._cooldown_left = self.cooldown
+                return "grow"
+            return "hold"
+        self._grow_streak = 0
+        if (queue_depth == 0 and n_live > self.min_engines
+                and demand <= (n_live - 1) * self.engine_cap and shrinkable):
+            self._shrink_streak += 1
+            if self._shrink_streak >= self.shrink_patience:
+                self._shrink_streak = 0
+                self._cooldown_left = self.cooldown
+                return "shrink"
+            return "hold"
+        self._shrink_streak = 0
+        return "hold"

@@ -555,6 +555,19 @@ class SchedulerConfig:
     # slot's KV to the coldest (cross-engine migration over the RDMA
     # plane) if the active-slot imbalance is >= 2. 0 disables rebalancing.
     decode_rebalance_every: int = 0
+    # Decode-pool autoscaling (serving/pool.py PoolAutoscaler): between
+    # decode turns a deterministic controller grows the pool (engine spawn)
+    # when demand exceeds what the live engines can carry at the SLO batch
+    # cap, and shrinks it (migration-backed retirement) when N-1 engines
+    # could absorb the load. min/max clamp the live engine count; the
+    # patience/cooldown knobs are the hysteresis (turns a condition must
+    # hold / turns to sit out after any scale event).
+    autoscale: bool = False
+    min_engines: int = 1
+    max_engines: int = 4
+    autoscale_grow_patience: int = 1
+    autoscale_shrink_patience: int = 3
+    autoscale_cooldown: int = 2
 
 
 class Scheduler:
@@ -581,6 +594,10 @@ class Scheduler:
                 raise ValueError("need at least one decode slot manager")
         self.slot_mgr = self.slot_mgrs[0]      # single-engine compatibility
         self.n_decode = len(self.slot_mgrs)
+        # Liveness mask over decode engines (autoscaling parks retired
+        # engines in place). Persists across epochs — engine lifecycle is
+        # pool state, not per-wave state.
+        self._live = [True] * self.n_decode
         cost = self.config.decode_cost
         if (self.config.use_mtp and cost.mtp_iter_factor == 1.0
                 and cost.mtp_accept == 0.0):
@@ -614,12 +631,19 @@ class Scheduler:
         self._eng_tokens = [0] * self.n_decode
         self.migrations = 0
         self.migration_seconds = 0.0
+        # Autoscale bookkeeping: scale events + the live-engine-count
+        # timeline, both on the virtual clock (per-epoch like the trace).
+        self.scale_events: List[Dict[str, Any]] = []
+        self.engine_count_timeline: List[Tuple[float, int]] = [
+            (0.0, sum(self._live))]
 
     @property
     def decode_now(self) -> float:
-        """Pool frontier: the earliest virtual time any decode engine can
-        take new work (single-engine: the engine clock)."""
-        return min(self._decode_now)
+        """Pool frontier: the earliest virtual time any *live* decode
+        engine can take new work (single-engine: the engine clock). Parked
+        engines' stale clocks must not drag the frontier backwards."""
+        clocks = [c for c, live in zip(self._decode_now, self._live) if live]
+        return min(clocks) if clocks else min(self._decode_now)
 
     # -- prefill side ------------------------------------------------------
     def on_arrival(self, rid: int, arrival: float,
@@ -756,8 +780,46 @@ class Scheduler:
             return
         t = min(busy)
         for e in range(self.n_decode):
-            if e not in stepped:
+            if e not in stepped and self._live[e]:
                 self._decode_now[e] = max(self._decode_now[e], t)
+
+    # -- dynamic engine lifecycle (decode-pool autoscaling) ----------------
+    def register_engine(self, slot_mgr) -> int:
+        """A fresh decode engine joined the pool mid-wave: append its
+        admission view and per-engine counters, and warm its virtual clock
+        to the busy frontier (the same point ``sync_idle_clocks`` pulls
+        idle peers to) — a zero clock would re-serialize open-loop arrival
+        visibility onto an engine that did not exist yet."""
+        frontier = self.decode_now
+        e = self.n_decode
+        self.slot_mgrs.append(slot_mgr)
+        self.n_decode += 1
+        self._live.append(True)
+        self._decode_now.append(frontier)
+        self._eng_busy.append(0.0)
+        self._eng_steps.append(0)
+        self._eng_tokens.append(0)
+        return e
+
+    def set_engine_live(self, engine: int, live: bool) -> None:
+        """Park (retired) or revive an existing engine's views. A revived
+        engine's clock is warmed to the busy frontier: it comes back *now*,
+        not at the stale instant it was parked."""
+        if live and not self._live[engine]:
+            frontier = self.decode_now
+            self._live[engine] = True
+            self._decode_now[engine] = max(self._decode_now[engine], frontier)
+        else:
+            self._live[engine] = live
+
+    def record_scale_event(self, action: str, engine: int) -> None:
+        """Stamp a grow/shrink decision on the virtual timeline (called
+        after the pool applied it, so the live count is the new one)."""
+        n_live = sum(self._live)
+        t = self.decode_now
+        self.scale_events.append({"t": t, "action": action, "engine": engine,
+                                  "engines_live": n_live})
+        self.engine_count_timeline.append((t, n_live))
 
     def feedback_mtp_acceptance(self) -> Optional[float]:
         """Fold the draft-acceptance rate *measured* by the finished trace
@@ -808,10 +870,22 @@ class Scheduler:
         if self.n_decode > 1:
             makespan = max(max(self._decode_now), 1e-12)
             s["decode_engines"] = self.n_decode
+            s["engines_live"] = sum(self._live)
             s["migrations"] = self.migrations
             s["engine_decode_steps"] = list(self._eng_steps)
             s["engine_decode_tokens"] = list(self._eng_tokens)
             s["engine_busy_s"] = [round(b, 9) for b in self._eng_busy]
             s["engine_util"] = [round(b / makespan, 4)
                                 for b in self._eng_busy]
+        if self.config.autoscale or self.scale_events:
+            # An autoscale wave with zero events is a legitimate all-hold
+            # run — still report the (flat) timeline rather than looking
+            # like autoscale was off.
+            s["scale_events"] = len(self.scale_events)
+            s["scale_grows"] = sum(e["action"] == "grow"
+                                   for e in self.scale_events)
+            s["scale_shrinks"] = sum(e["action"] == "shrink"
+                                     for e in self.scale_events)
+            s["engine_count_timeline"] = [[round(t, 9), n] for t, n
+                                          in self.engine_count_timeline]
         return s

@@ -1,0 +1,356 @@
+"""Decode-pool autoscaling: PoolAutoscaler hysteresis/clamp semantics
+(pure control plane), the engine spawn/revive/retire lifecycle against the
+scheduler's per-engine views, and the end-to-end guarantee — an open-loop
+Poisson burst grows the pool, the tail shrinks it via migration-backed
+retirement, and the emitted tokens stay identical to a fixed-size pool at
+the max engine count."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.models import init_params, prefill
+from repro.serving import (DecodeCostModel, DecodeEngine, DecodePool,
+                           PoolAutoscaler, Request, RequestResult, Scheduler,
+                           SchedulerConfig, ServingSystem, poisson_requests,
+                           make_decode_router)
+from repro.serving.scheduler import DecodeSlotManager
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def make_scaler(**kw):
+    kw.setdefault("cost", DecodeCostModel())
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("min_engines", 1)
+    kw.setdefault("max_engines", 4)
+    return PoolAutoscaler(kw.pop("cost"), kw.pop("n_slots"),
+                          kw.pop("min_engines"), kw.pop("max_engines"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Controller unit semantics (no jax, fully deterministic)
+# ---------------------------------------------------------------------------
+
+
+def test_autoscaler_validates_configuration():
+    with pytest.raises(ValueError, match="min_engines <= max_engines"):
+        make_scaler(min_engines=3, max_engines=2)
+    with pytest.raises(ValueError, match="min_engines <= max_engines"):
+        make_scaler(min_engines=0, max_engines=2)
+    with pytest.raises(ValueError, match="n_slots"):
+        make_scaler(n_slots=0)
+    with pytest.raises(ValueError, match="patience"):
+        make_scaler(grow_patience=0)
+
+
+def test_autoscaler_engine_cap_follows_tpot_budget():
+    cost = DecodeCostModel(fixed_s=4e-3, per_req_s=1e-3)
+    # no budget: cap = slot count
+    assert make_scaler(cost=cost, n_slots=8).engine_cap == 8
+    # budget admits batch 5 (4 + 5*1 = 9ms) — the gate's own projection
+    s = make_scaler(cost=cost, n_slots=8, tpot_budget_s=9e-3)
+    assert s.engine_cap == cost.max_batch_for(9e-3) == 5
+    # budget below the fixed cost still leaves a cap of 1 (never 0 — a
+    # zero cap would demand infinite engines for any load)
+    assert make_scaler(cost=cost, n_slots=8,
+                       tpot_budget_s=1e-3).engine_cap == 1
+    # slots still clamp from above
+    assert make_scaler(cost=cost, n_slots=2, tpot_budget_s=9e-3
+                       ).engine_cap == 2
+
+
+def test_autoscaler_grow_hysteresis_and_cooldown():
+    s = make_scaler(grow_patience=2, shrink_patience=2, cooldown=2)
+    # demand 5 > 1 engine * cap 2: pressure, but patience=2 delays the grow
+    assert s.decide(1, 2, 3) == "hold"
+    assert s.decide(1, 2, 3) == "grow"
+    # cooldown: two quiet turns even though pressure persists
+    assert s.decide(2, 4, 3) == "hold"
+    assert s.decide(2, 4, 3) == "hold"
+    # streaks were reset by the cooldown — patience counts from zero again
+    assert s.decide(2, 4, 3) == "hold"
+    assert s.decide(2, 4, 3) == "grow"
+
+
+def test_autoscaler_grow_streak_resets_when_pressure_clears():
+    s = make_scaler(grow_patience=2, cooldown=0)
+    assert s.decide(1, 2, 3) == "hold"          # streak 1
+    assert s.decide(1, 1, 0) == "hold"          # pressure gone: reset
+    assert s.decide(1, 2, 3) == "hold"          # streak must rebuild
+    assert s.decide(1, 2, 3) == "grow"
+
+
+def test_autoscaler_shrink_hysteresis_and_tail():
+    s = make_scaler(grow_patience=1, shrink_patience=3, cooldown=0)
+    # 3 engines, demand 2 fits in (3-1)*2=4: shrink after 3 quiet turns
+    assert s.decide(3, 2, 0) == "hold"
+    assert s.decide(3, 2, 0) == "hold"
+    assert s.decide(3, 2, 0) == "shrink"
+    # queued work vetoes shrink outright (and resets the streak)
+    assert s.decide(3, 2, 1) == "hold"
+    assert s.decide(3, 2, 0) == "hold"
+    # an unabsorbable drain (atomic pre-check failed) also reads as hold
+    assert s.decide(3, 2, 0, shrinkable=False) == "hold"
+
+
+def test_autoscaler_min_max_clamps():
+    s = make_scaler(min_engines=2, max_engines=3, grow_patience=1,
+                    shrink_patience=1, cooldown=0)
+    assert s.decide(3, 99, 99) == "hold"        # at max: never grow
+    assert s.decide(2, 0, 0) == "hold"          # at min: never shrink
+    assert s.decide(2, 99, 0) == "grow"
+    assert s.decide(3, 0, 0) == "shrink"
+
+
+def test_autoscaler_never_grows_and_shrinks_in_one_turn():
+    """A single decide() call emits exactly one action, and the conditions
+    are mutually exclusive for any demand/cap — sweep a demand grid."""
+    s = make_scaler(min_engines=1, max_engines=4, grow_patience=1,
+                    shrink_patience=1, cooldown=0)
+    for n_live in (1, 2, 3, 4):
+        for active in range(0, 10):
+            for queue in range(0, 4):
+                d = s.decide(n_live, active, queue)
+                assert d in ("grow", "hold", "shrink")
+                s.reset()
+    # and a grow is never chased by a shrink inside the cooldown window
+    s = make_scaler(grow_patience=1, shrink_patience=1, cooldown=1)
+    assert s.decide(1, 2, 3) == "grow"
+    assert s.decide(2, 0, 0) == "hold"          # cooldown, not shrink
+
+
+# ---------------------------------------------------------------------------
+# Engine spawn / revive / retire lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_spawn_revive_retire_lifecycle(granite):
+    cfg, params = granite
+    built = []
+
+    def factory(seed):
+        built.append(seed)
+        return DecodeEngine(params, cfg, 2, 24, seed=seed)
+
+    pool = DecodePool([factory(0)], make_decode_router("round_robin", 1),
+                      engine_factory=factory)
+    assert (pool.n, pool.n_live) == (1, 1)
+    e, revived = pool.spawn_engine()
+    assert (e, revived) == (1, False) and built == [0, 1]
+    assert pool.router.n == 2 and pool.live_ids == [0, 1]
+    pool.retire_engine(1)                        # idle: nothing to drain
+    assert pool.n_live == 1 and pool.live_mask == [True, False]
+    # a parked engine is invisible to routing and cannot take migrations
+    assert pool.select_engine() == 0
+    # grow again: the parked engine revives — no new construction
+    e, revived = pool.spawn_engine()
+    assert (e, revived) == (1, True) and built == [0, 1]
+    assert pool.n_live == 2
+    pool.retire_engine(0)
+    with pytest.raises(ValueError, match="last live engine"):
+        pool.retire_engine(1)
+    with pytest.raises(ValueError, match="already parked"):
+        pool.retire_engine(0)
+
+
+def test_spawn_without_factory_raises(granite):
+    cfg, params = granite
+    pool = DecodePool([DecodeEngine(params, cfg, 2, 24)],
+                      make_decode_router("round_robin", 1))
+    with pytest.raises(RuntimeError, match="engine_factory"):
+        pool.spawn_engine()
+
+
+def test_retire_engine_drains_atomically_into_peers(granite):
+    cfg, params = granite
+    engines = [DecodeEngine(params, cfg, 2, 24, seed=e) for e in range(2)]
+    pool = DecodePool(engines, make_decode_router("least_loaded_slots", 2))
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([[5, 6, 7]], jnp.int32)},
+                             capacity=24, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    for rid in (0, 1):
+        res = RequestResult(rid, [])
+        pool.add(0, pool.engines[0].free_slot(), caches, first, 3, res, 4)
+    assert pool.can_drain(0)
+    moved = pool.retire_engine(0)
+    assert len(moved) == 2 and pool.engines[1].active == 2
+    assert pool.live_mask == [False, True]
+    # retired means parked: routing and migration both refuse it
+    assert pool.select_engine() == 1
+    with pytest.raises(Exception, match="parked"):
+        pool.migrate(0, 0)
+
+
+def test_scheduler_register_engine_warms_clock_to_frontier():
+    sched = Scheduler(1, DecodeSlotManager(2, 64), SchedulerConfig())
+    tr = sched.on_arrival(0, 0.0, 8)
+    sched.on_prefill_done(tr, 0, 8, 0)
+    sched.on_transfer(tr, 0.0)
+    sched.slot_mgrs[0].allocate(0, 8)
+    sched.on_admit(tr, 0, engine=0)
+    for _ in range(3):
+        sched.on_decode_step([0], [], engine=0)
+    frontier = sched.decode_now
+    assert frontier > 0
+    e = sched.register_engine(DecodeSlotManager(2, 64))
+    assert e == 1 and sched.n_decode == 2
+    # the new engine joins *now*, not at virtual t=0
+    assert sched._decode_now[e] == pytest.approx(frontier)
+    assert sched.decode_now == pytest.approx(frontier)
+    # parking an engine removes its stale clock from the frontier
+    sched.set_engine_live(e, False)
+    for _ in range(2):
+        sched.on_decode_step([0], [], engine=0)
+    assert sched.decode_now > frontier
+    # ...and reviving warms it up to the current frontier again
+    sched.set_engine_live(e, True)
+    assert sched._decode_now[e] == pytest.approx(sched.decode_now)
+
+
+def test_scale_events_recorded_on_virtual_timeline():
+    sched = Scheduler(1, DecodeSlotManager(2, 64), SchedulerConfig())
+    sched.register_engine(DecodeSlotManager(2, 64))
+    sched.record_scale_event("grow", 1)
+    sched.set_engine_live(1, False)
+    sched.record_scale_event("shrink", 1)
+    assert [e["action"] for e in sched.scale_events] == ["grow", "shrink"]
+    assert [e["engines_live"] for e in sched.scale_events] == [2, 1]
+    assert [n for _, n in sched.engine_count_timeline] == [1, 2, 1]
+    s = sched.summary()
+    assert s["scale_events"] == 2
+    assert (s["scale_grows"], s["scale_shrinks"]) == (1, 1)
+    # a fresh epoch clears the events but keeps the live mask
+    sched.begin_epoch()
+    assert sched.scale_events == []
+    assert sched.engine_count_timeline == [(0.0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: burst grows, tail shrinks, tokens identical to fixed pool
+# ---------------------------------------------------------------------------
+
+
+def _burst(cfg, n=10, rate=400.0, max_new=8, seed=5):
+    return poisson_requests(n, rate, 10, max_new, 100, seed=seed)
+
+
+def assert_monotone(records):
+    for rec in records:
+        if rec["shed"]:
+            continue
+        assert rec["arrival"] <= rec["prefill_start"] <= rec["prefill_end"]
+        ready = rec["prefill_end"] + rec["transfer_seconds"]
+        assert rec["decode_admit"] >= ready - 1e-12
+        assert rec["decode_end"] >= rec["decode_admit"]
+
+
+def test_autoscale_e2e_burst_grows_tail_shrinks_token_identical(granite):
+    cfg, params = granite
+    reqs = _burst(cfg)
+    fixed = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                          capacity=32, decode_engines=3)
+    ref = {r.rid: r.tokens for r in fixed.serve(
+        [Request(r.rid, list(r.prompt), r.max_new_tokens, r.arrival)
+         for r in reqs], open_loop=True)}
+    auto = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                         capacity=32, decode_engines=1, autoscale=True,
+                         min_engines=1, max_engines=3)
+    results = auto.serve(reqs, open_loop=True)
+    assert {r.rid: r.tokens for r in results} == ref
+    sched = auto.scheduler
+    s = sched.summary()
+    assert s["scale_grows"] >= 1 and s["scale_shrinks"] >= 1
+    counts = [n for _, n in sched.engine_count_timeline]
+    assert max(counts) == 3                     # the burst hit the clamp
+    assert counts[-1] < max(counts)             # the tail shrank the pool
+    # grow precedes shrink and the timeline never rewinds
+    times = [t for t, _ in sched.engine_count_timeline]
+    assert times == sorted(times)
+    first_shrink = next(e for e in sched.scale_events
+                        if e["action"] == "shrink")
+    assert all(e["t"] <= first_shrink["t"] for e in sched.scale_events
+               if e["action"] == "grow" and e["t"] < first_shrink["t"])
+    # shrink-migrated requests are stamped on the trace
+    assert_monotone(sched.trace_records())
+    # slot conservation holds across spawned engines
+    for mgr in auto.pool.slot_mgrs:
+        assert mgr.acquired == mgr.released + mgr.active
+        assert mgr.active == 0
+
+
+def test_autoscale_respects_max_clamp_and_budget_cap(granite):
+    """With a TPOT budget the controller sizes engines by the gate's batch
+    cap, and never exceeds max_engines however hard the burst."""
+    cfg, params = granite
+    cost = DecodeCostModel(fixed_s=4e-3, per_req_s=1e-3)
+    auto = ServingSystem(params, cfg, n_prefill=2, decode_batch=4,
+                         capacity=32, decode_engines=1, autoscale=True,
+                         min_engines=1, max_engines=2,
+                         tpot_budget_ms=6.0, admission="queue",
+                         scheduler_config=SchedulerConfig(decode_cost=cost))
+    assert auto.scheduler.gate.max_batch == 2
+    results = auto.serve(_burst(cfg, n=8, max_new=6, seed=7),
+                         open_loop=True)
+    assert len(results) == 8 and not any(r.shed for r in results)
+    sched = auto.scheduler
+    assert max(n for _, n in sched.engine_count_timeline) == 2
+    # the per-engine gate held: no admitted batch ever exceeded the cap,
+    # so every trace TPOT is within budget
+    s = sched.summary()
+    assert s["tpot_max_s"] * 1e3 <= 6.0 + 1e-9
+
+
+def test_autoscale_second_wave_revives_parked_engines(granite):
+    """Across serve() waves the pool keeps its engines: wave 2's burst
+    revives parked engines instead of constructing (re-jitting) new ones,
+    and per-wave scale events start fresh."""
+    cfg, params = granite
+    auto = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                         capacity=32, decode_engines=1, autoscale=True,
+                         min_engines=1, max_engines=3)
+    auto.serve(_burst(cfg), open_loop=True)
+    n_after_wave1 = auto.pool.n
+    assert n_after_wave1 > 1
+    auto.serve(_burst(cfg, seed=6), open_loop=True)
+    assert auto.pool.n == n_after_wave1          # revived, not re-built
+    assert auto.scheduler.summary()["scale_grows"] >= 1
+    for mgr in auto.pool.slot_mgrs:
+        assert mgr.acquired == mgr.released + mgr.active
+
+
+def test_autoscale_requires_initial_size_inside_clamp(granite):
+    cfg, params = granite
+    with pytest.raises(ValueError, match="autoscale clamp"):
+        ServingSystem(params, cfg, decode_batch=2, capacity=32,
+                      decode_engines=5, autoscale=True,
+                      min_engines=1, max_engines=4)
+
+
+def test_reconfigure_scheduler_preserves_parked_engines(granite):
+    cfg, params = granite
+    auto = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                         capacity=32, decode_engines=1, autoscale=True,
+                         min_engines=1, max_engines=3)
+    auto.serve(_burst(cfg), open_loop=True)
+    parked = [e for e, live in enumerate(auto.pool.live_mask) if not live]
+    assert parked                                # the tail parked someone
+    auto.reconfigure_scheduler(SchedulerConfig(autoscale=True,
+                                               min_engines=1, max_engines=3))
+    assert auto.scheduler._live == auto.pool.live_mask
+    # a non-autoscale wave on the same system still serves correctly on
+    # the remaining live engines
+    auto.reconfigure_scheduler(SchedulerConfig())
+    rng = np.random.RandomState(3)
+    reqs = [Request(i, list(rng.randint(0, 100, 10)), 4) for i in range(4)]
+    results = auto.serve(reqs)
+    assert len(results) == 4 and not any(r.shed for r in results)
+    assert all(t.decode_engine not in parked
+               for t in auto.scheduler.tracker.finished)

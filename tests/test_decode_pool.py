@@ -257,8 +257,75 @@ def test_migration_error_paths(granite):
         pool.migrate(0, 0)
     with pytest.raises(SlotError, match="no free slot"):
         pool.migrate(0, 1)                       # engine 1 is full
-    with pytest.raises(SlotError, match="no peer has a free slot"):
+    with pytest.raises(SlotError, match="all-or-nothing"):
         pool.drain_engine(0)
+
+
+def test_drain_engine_is_atomic_when_peers_cannot_absorb(granite):
+    """Regression (half-drain bug): drain used to migrate slot by slot and
+    raise only when the peers filled mid-drain — leaving some requests
+    moved and some stranded. The aggregate-capacity pre-check makes drain
+    all-or-nothing: on failure, *nothing* has migrated."""
+    cfg, params = granite
+    pool = _manual_pool(cfg, params, capacity=24, n=2, batch=2)
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([[1, 2, 3, 4]],
+                                                    jnp.int32)},
+                             capacity=24, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    # engine 0 fully loaded (2 active); engine 1 has 1 active, 1 free —
+    # the old code migrated one request, then raised on the second.
+    for rid, engine in ((0, 0), (1, 0), (2, 1)):
+        res = RequestResult(rid, [])
+        pool.add(engine, pool.engines[engine].free_slot(), caches, first,
+                 4, res, 4)
+    with pytest.raises(SlotError, match="all-or-nothing"):
+        pool.drain_engine(0)
+    assert pool.engines[0].active == 2          # nothing moved
+    assert pool.engines[1].active == 1
+    assert pool.migrations == 0
+    # free a peer slot: the same drain now moves everything
+    pool.engines[1].slot_mgr.release(
+        next(iter(pool.engines[1].slot_mgr.active_slots()))[0])
+    moved = pool.drain_engine(0)
+    assert len(moved) == 2 and pool.engines[0].active == 0
+
+
+def test_rebalance_prefers_victim_without_cache_affinity(granite):
+    """Regression (affinity-thrash bug): the rebalancer used to migrate
+    the hottest engine's lowest-numbered slot, which under cache_affinity
+    could be a request whose cached prefix blocks live on that very
+    engine — the router would route the next shared-prefix admission right
+    back, fighting the move. The victim must be a request *without* block
+    residency on the source engine when one exists."""
+    cfg, params = granite
+    pool = DecodePool(
+        [DecodeEngine(params, cfg, 4, 24, seed=e) for e in range(2)],
+        make_decode_router("cache_affinity", 2))
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([[1, 2, 3, 4]],
+                                                    jnp.int32)},
+                             capacity=24, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    shared = ("cc:prefix0", "cc:prefix1")
+    # slots 0/1 on engine 0 hold shared-prefix requests (resident blocks);
+    # slot 2 holds an affinity-free request. Engine 1 idles.
+    for rid, keys in ((0, shared), (1, shared), (2, ())):
+        res = RequestResult(rid, [])
+        pool.add(0, pool.engines[0].free_slot(), caches, first, 4, res, 6,
+                 block_keys=keys)
+    moved = pool.rebalance()
+    assert moved is not None
+    rid, src, dst, _ = moved
+    assert (src, dst) == (0, 1)
+    assert rid == 2                # the non-resident request moved…
+    assert pool.router.residency(0, shared) == 2   # …residency unperturbed
+    # with only resident requests left (release the migrated one), the
+    # fallback is the old deterministic choice: lowest active slot moves
+    pool.engines[1].slot_mgr.release(
+        next(iter(pool.engines[1].slot_mgr.active_slots()))[0])
+    moved = pool.rebalance()
+    assert moved is not None and moved[0] == 0
 
 
 def test_drain_engine_retires_all_slots(granite):
