@@ -31,8 +31,10 @@ bench-slo:
 # bench_mtp runs after bench_decode_throughput: it merges the MTP section
 # (acceptance rate + fused-MTP speedup) into the same BENCH_decode.json.
 # bench-check (its own CI step, and part of `make ci`) asserts the decode
-# artifact is schema 4 with the pool autoscale section (engine-count
-# timeline + scale-event counts) present.
+# artifact is schema 5: the pool autoscale section (engine-count timeline
+# + scale-event counts) AND the continuous_batching section (dead-slot
+# rate before/after, mid-scan refill counts, token identity, zero TPOT
+# budget violations).
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_mtp --smoke
@@ -40,14 +42,25 @@ bench-smoke:
 
 bench-check:
 	$(PY) -c "import json; d = json.load(open('BENCH_decode.json')); \
-	assert d['schema'] == 4, f'BENCH_decode.json schema {d[\"schema\"]} != 4'; \
+	assert d['schema'] == 5, f'BENCH_decode.json schema {d[\"schema\"]} != 5'; \
 	a = d['pool']['autoscale']; \
 	assert a['engine_count_timeline'] and 'scale_grows' in a \
 	and 'scale_shrinks' in a, 'autoscale section incomplete'; \
 	assert a['tokens_identical_to_fixed_pool'] is True, \
 	'autoscaled tokens diverged from the fixed-size pool'; \
-	print('BENCH_decode.json schema 4 OK:', \
+	cb = d['continuous_batching']; \
+	assert cb['tokens_identical_to_per_step'] is True, \
+	'continuous-batching tokens diverged from per-step decode'; \
+	assert cb['after']['dead_slot_rate'] < cb['before']['dead_slot_rate'], \
+	'continuous batching did not lower the dead-slot rate'; \
+	assert cb['after']['mid_scan_refills'] >= 0 \
+	and 'mid_scan_refills' in cb['before'], 'refill counts missing'; \
+	assert cb['tpot_budget_violations'] == 0, \
+	f\"TPOT gate violated {cb['tpot_budget_violations']}x under CB\"; \
+	print('BENCH_decode.json schema 5 OK:', \
 	f\"{a['scale_grows']} grows, {a['scale_shrinks']} shrinks, \" \
-	f\"peak {a['peak_engines']} engines\")"
+	f\"peak {a['peak_engines']} engines; dead_slot_rate \" \
+	f\"{cb['before']['dead_slot_rate']} -> {cb['after']['dead_slot_rate']} \" \
+	f\"({cb['after']['mid_scan_refills']} mid-scan refills)\")"
 
 ci: smoke test bench-smoke bench-check

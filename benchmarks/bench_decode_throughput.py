@@ -112,10 +112,72 @@ def _live_rows() -> None:
     emit("decode_tput", f"fastpath_chunk{FAST_CHUNK}_speedup",
          round(speedup, 2), "wall_chunk1/wall_chunkN")
     artifact["fastpath_speedup"] = speedup
+    artifact["continuous_batching"] = _continuous_rows()
     artifact["pool"] = _pool_rows()
     artifact["pool"]["autoscale"] = _autoscale_rows()
     path = write_bench_artifact("decode", artifact)
     emit("decode_tput", "artifact", path, "")
+
+
+def _continuous_rows() -> dict:
+    """Continuous-batching open-loop comparison (schema 5): the identical
+    Poisson arrival trace through the chunked fast path with continuous
+    batching off (wave-shaped: the before section) and on (adaptive scan
+    widths + mid-scan refill: the after section), plus a per-step
+    reference. Asserted downstream by ``make bench-check``: dead-slot
+    rate measurably lower with CB on, zero TPOT-budget violations, and
+    emitted tokens bit-identical to per-step decode for every request."""
+    from benchmarks.common import (CB_CHUNK, CB_MAX_NEW, continuous_burst,
+                                   live_continuous_serve)
+    from repro.serving import Request
+
+    budget_ms = 9.0
+    reqs = continuous_burst()       # ONE arrival trace for all three runs
+    clone = lambda: [Request(r.rid, list(r.prompt), r.max_new_tokens,  # noqa: E731
+                             r.arrival) for r in reqs]
+    runs = {}
+    for label, chunk, continuous in (("per_step", 1, False),
+                                     ("before", CB_CHUNK, False),
+                                     ("after", CB_CHUNK, True)):
+        results, scheduler = live_continuous_serve(
+            continuous=continuous, decode_chunk=chunk,
+            tpot_budget_ms=budget_ms, requests=clone())
+        s = scheduler.summary()
+        tokens = {r.rid: list(r.tokens) for r in results}
+        violations = sum(1 for t in scheduler.tracker.finished
+                         if t.decode_iters > 0
+                         and t.tpot > budget_ms * 1e-3 + 1e-12)
+        runs[label] = {"tokens": tokens, "violations": violations,
+                       "summary": s}
+        if label != "per_step":
+            emit("decode_tput", f"continuous_{label}_dead_slot_rate",
+                 round(s["dead_slot_rate"], 4),
+                 f"masked={s['masked_slot_iters']};"
+                 f"live={s['live_slot_iters']};"
+                 f"refills={s['mid_scan_refills']}")
+
+    identical = (runs["after"]["tokens"] == runs["per_step"]["tokens"]
+                 and runs["before"]["tokens"] == runs["per_step"]["tokens"])
+    section = {
+        "decode_chunk": CB_CHUNK, "max_new": CB_MAX_NEW,
+        "tpot_budget_ms": budget_ms,
+        "requests": len(reqs),
+        "before": {k: runs["before"]["summary"][k] for k in
+                   ("dead_slot_rate", "masked_slot_iters",
+                    "live_slot_iters", "mid_scan_refills", "completed")},
+        "after": {k: runs["after"]["summary"][k] for k in
+                  ("dead_slot_rate", "masked_slot_iters",
+                   "live_slot_iters", "mid_scan_refills", "completed")},
+        "tpot_budget_violations": sum(r["violations"]
+                                      for r in runs.values()),
+        "tokens_identical_to_per_step": identical,
+    }
+    emit("decode_tput", "continuous_tokens_identical_to_per_step",
+         identical, f"chunk={CB_CHUNK};max_new={CB_MAX_NEW}")
+    emit("decode_tput", "continuous_mid_scan_refills",
+         section["after"]["mid_scan_refills"],
+         f"tpot_violations={section['tpot_budget_violations']}")
+    return section
 
 
 def _pool_rows() -> dict:

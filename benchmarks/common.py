@@ -64,13 +64,15 @@ def emit(name: str, metric: str, value, derived: str = "") -> None:
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def write_bench_artifact(name: str, payload: Dict, schema: int = 4) -> str:
+def write_bench_artifact(name: str, payload: Dict, schema: int = 5) -> str:
     """Persist a benchmark record as BENCH_<name>.json at the repo root so
     the perf trajectory is trackable PR-over-PR. Schema 2 added the MTP
     section (acceptance rate + speedup) to the decode artifact; schema 3
     added the decode-pool section (per-engine throughput + routing policy +
-    migration counts); schema 4 adds the pool autoscale section
+    migration counts); schema 4 added the pool autoscale section
     (engine-count timeline + scale-event counts + fixed-pool token
+    identity); schema 5 adds the continuous-batching section
+    (dead_slot_rate before/after, mid-scan refill counts, per-step token
     identity)."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
@@ -80,7 +82,7 @@ def write_bench_artifact(name: str, payload: Dict, schema: int = 4) -> str:
     return path
 
 
-def update_bench_artifact(name: str, extra: Dict, schema: int = 4) -> str:
+def update_bench_artifact(name: str, extra: Dict, schema: int = 5) -> str:
     """Merge ``extra`` into an existing BENCH_<name>.json (or start a fresh
     one) — benches that contribute sections to a shared artifact (bench_mtp
     -> BENCH_decode.json) use this instead of clobbering it."""
@@ -316,6 +318,56 @@ def live_autoscale_serve(*, requests=None, min_engines: int = 1,
             decode_cost=calibrated_decode_cost(LIVE_ARCH)))
     results = system.serve(reqs, open_loop=True)
     return results, system.scheduler, system
+
+
+CB_CHUNK = 4       # scan width for the continuous-batching comparison
+CB_MAX_NEW = 6     # != 1 (mod CB_CHUNK): every request ends mid-chunk, so
+#                    the wave-shaped loop provably burns masked iterations
+
+
+def continuous_burst(n_requests: int = 12, rate_rps: float = 300.0,
+                     max_new: int = CB_MAX_NEW, seed: int = 7):
+    """The canonical continuous-batching bench burst: one definition shared
+    by the CB-on, CB-off, and per-step reference runs, so all three
+    provably serve the identical arrival trace."""
+    from repro.serving.workload import poisson_requests
+
+    cfg, _ = live_model()
+    return poisson_requests(n_requests, rate_rps, LIVE_PROMPT_LEN, max_new,
+                            cfg.vocab_size, seed=seed)
+
+
+def live_continuous_serve(*, continuous: bool, decode_chunk: int = CB_CHUNK,
+                          tpot_budget_ms=9.0, admission: str = "queue",
+                          decode_batch: int = 3, max_new: int = CB_MAX_NEW,
+                          requests=None):
+    """Open-loop burst (default: :func:`continuous_burst`) through the
+    chunked decode fast path with continuous batching on or off; returns
+    (results, scheduler). The system is cached per (chunk, batch) shape —
+    ``continuous_batching`` is control-plane and flips via
+    ``reconfigure_scheduler``, so the on/off comparison reuses one
+    compiled system (adaptive widths jit lazily on the first CB-on run).
+    ``decode_chunk=1`` gives the per-step token-identity reference."""
+    from repro.serving import SchedulerConfig, ServingSystem
+
+    cfg, params = live_model()
+    reqs = continuous_burst(max_new=max_new) if requests is None \
+        else requests
+    key = ("cb", decode_chunk, decode_batch, max_new)
+    system = _live_systems.get(key)
+    if system is None:
+        system = ServingSystem(
+            params, cfg, n_prefill=2, decode_batch=decode_batch,
+            capacity=LIVE_PROMPT_LEN + max_new + 16,
+            decode_chunk=decode_chunk)
+        _live_systems[key] = system
+    system.reconfigure_scheduler(
+        SchedulerConfig(tpot_budget_ms=tpot_budget_ms, admission=admission,
+                        decode_chunk=decode_chunk,
+                        continuous_batching=continuous,
+                        decode_cost=calibrated_decode_cost(LIVE_ARCH)))
+    results = system.serve(reqs, open_loop=True)
+    return results, system.scheduler
 
 
 def live_poisson_serve(*, rate_rps: float, tpot_budget_ms=None,

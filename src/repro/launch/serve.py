@@ -8,7 +8,7 @@
        cache_affinity [--rebalance-every 4]] \
       [--autoscale --min-engines 1 --max-engines 4] \
       [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
-      [--decode-chunk 4] [--prefill-chunk 32] \
+      [--decode-chunk 4 [--continuous-batching]] [--prefill-chunk 32] \
       [--poisson-rate 100 [--open-loop]] [--seed 0] [--trace]
 """
 from __future__ import annotations
@@ -83,6 +83,12 @@ def main() -> None:
                     help="decode iterations per host sync (scanned "
                          "device-resident decode fast path; with --mtp each "
                          "iteration speculates, so up to 2x tokens)")
+    ap.add_argument("--continuous-batching", action="store_true",
+                    help="adaptive scan widths + mid-scan slot refill on "
+                         "the chunked fast path: shrink the next chunk to "
+                         "where a finish or gate-held admission lands, and "
+                         "refill freed slots between engine chunks (see "
+                         "dead_slot_rate / mid_scan_refills in the summary)")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="run fresh prompts through chunked prefill_continue "
                          "calls of this width (bounded compile shapes)")
@@ -148,6 +154,8 @@ def main() -> None:
                            admission=args.admission,
                            interleave=args.interleave,
                            decode_chunk=args.decode_chunk,
+                           continuous_batching=args.continuous_batching
+                           or None,
                            prefill_chunk=args.prefill_chunk)
     t0 = time.time()
     results = system.serve(reqs, open_loop=open_loop)

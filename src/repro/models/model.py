@@ -566,20 +566,32 @@ def decode_loop(params: dict, cfg: ModelConfig, tokens: jax.Array,
 
     tokens: (B,) int32 current token per slot; cache_len: (B,) int32 (scalars
     are broadcast). steps_left: (B,) int32 tokens each slot still wants
-    (defaults to ``n_steps`` everywhere). ``step_fn`` overrides the inner
+    (defaults to ``n_steps`` everywhere; may exceed ``n_steps`` — the
+    continuous-batching engine jits this function at several scan widths
+    and dispatches the widest pre-jitted width that fits
+    ``min(steps_left)``, so a slot's remaining budget routinely spans
+    multiple dispatches). ``step_fn`` overrides the inner
     ``(tokens (B,1), caches, cache_len) -> (logits, caches)`` step — the
     hook the microbatch interleaver wraps.
 
     Returns ``(emitted (B, n_steps), live (B, n_steps), tokens (B,), caches,
     cache_len)``; ``emitted[:, j]`` is meaningful only where ``live[:, j]``.
+    Chunk-split invariance: because frozen slots hold bit-exactly and live
+    slots see the identical per-step computation, any partition of N total
+    iterations into scan dispatches emits identical tokens.
     """
     if tokens.ndim != 1:
         raise ValueError(f"decode_loop wants tokens of shape (B,), "
                          f"got {tokens.shape}")
+    if n_steps < 1:
+        raise ValueError(f"decode_loop needs n_steps >= 1, got {n_steps}")
     b = tokens.shape[0]
     cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
     if steps_left is None:
         steps_left = jnp.full((b,), n_steps, jnp.int32)
+    else:
+        # A stale/negative budget must read as "done", not wrap around.
+        steps_left = jnp.maximum(jnp.asarray(steps_left, jnp.int32), 0)
     if step_fn is None:
         mf = moe_fn
 
@@ -649,7 +661,11 @@ def decode_loop_mtp(params: dict, mtp: dict, cfg: ModelConfig,
 
     tokens/drafts: (B,) int32 — last committed token and its proposed
     successor (:func:`repro.core.mtp.propose_draft`). steps_left: (B,)
-    tokens each slot still wants (defaults to ``2*n_iters``). Returns
+    tokens each slot still wants (defaults to ``2*n_iters``; may exceed
+    what ``n_iters`` can drain — the continuous-batching engine dispatches
+    several pre-jitted widths against the same remaining budgets, and
+    greedy accept/reject is PRNG-independent so any width split commits
+    identical tokens). Returns
     ``(emitted (B, n_iters, 2), accepted (B, n_iters), live (B, n_iters),
     tokens, drafts, caches, cache_len)``; row ``emitted[:, j]`` is
     meaningful only where ``live[:, j]``, and ``emitted[:, j, 1]`` only
@@ -660,10 +676,14 @@ def decode_loop_mtp(params: dict, mtp: dict, cfg: ModelConfig,
     if tokens.ndim != 1:
         raise ValueError(f"decode_loop_mtp wants tokens of shape (B,), "
                          f"got {tokens.shape}")
+    if n_iters < 1:
+        raise ValueError(f"decode_loop_mtp needs n_iters >= 1, got {n_iters}")
     b = tokens.shape[0]
     cache_len = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (b,))
     if steps_left is None:
         steps_left = jnp.full((b,), 2 * n_iters, jnp.int32)
+    else:
+        steps_left = jnp.maximum(jnp.asarray(steps_left, jnp.int32), 0)
     if key is None:
         key = jax.random.PRNGKey(0)
 

@@ -297,15 +297,33 @@ class DecodeEngine:
         # place instead of allocating + copying a fresh cache per token.
         self._step = jax.jit(_step, donate_argnums=(2,))
 
-        def _loop(p, t, c, l, left):
-            base = lambda tt, cc, ll: model_mod.decode_step(  # noqa: E731
-                p, cfg, tt, cc, ll, moe_fn)
-            fn = interleaver.wrap(base, max_batch) if self.interleaved else base
-            return model_mod.decode_loop(p, cfg, t, c, l, self.decode_chunk,
-                                         steps_left=left, step_fn=fn)
+        # Continuous batching jits the scan at a small ladder of widths
+        # (powers of two up to decode_chunk, plus decode_chunk itself) so
+        # the effective chunk can shrink to where a refill or a finish
+        # lands without recompiling per width request. Loops jit lazily:
+        # a wave that never shrinks compiles exactly one program, same as
+        # before.
+        self._chunk_widths = sorted(
+            {w for w in (1 << p for p in range(self.decode_chunk.bit_length()))
+             if w <= self.decode_chunk} | {self.decode_chunk})
+        self._loops: dict = {}        # width -> jitted decode_loop
+        self._loops_mtp: dict = {}    # width -> jitted decode_loop_mtp
+        # Dead-slot observability: slot-iterations the device spent on
+        # live vs resident-but-masked slots across this engine's lifetime.
+        self.live_slot_iters = 0
+        self.dead_slot_iters = 0
 
-        self._loop = jax.jit(_loop, donate_argnums=(2,)) \
-            if self.decode_chunk > 1 and not use_mtp else None
+        def _make_loop(width: int):
+            def _loop(p, t, c, l, left):
+                base = lambda tt, cc, ll: model_mod.decode_step(  # noqa: E731
+                    p, cfg, tt, cc, ll, moe_fn)
+                fn = interleaver.wrap(base, max_batch) \
+                    if self.interleaved else base
+                return model_mod.decode_loop(p, cfg, t, c, l, width,
+                                             steps_left=left, step_fn=fn)
+            return jax.jit(_loop, donate_argnums=(2,))
+
+        self._make_loop = _make_loop
         if use_mtp:
             self._propose = jax.jit(
                 lambda p, mp, t: mtp_mod.propose_draft(p, mp, cfg, t))
@@ -314,14 +332,54 @@ class DecodeEngine:
                     p, mp, cfg, x, d, c, l, k, moe_fn,
                     fused_verify=self.mtp_fused),
                 donate_argnums=(4,))
-            # Scanned MTP fast path: decode_chunk speculative iterations
-            # (up to 2*decode_chunk tokens) per host sync, cache donated.
-            self._loop_mtp = jax.jit(
-                lambda p, mp, x, d, c, l, left, k: model_mod.decode_loop_mtp(
-                    p, mp, cfg, x, d, c, l, self.decode_chunk,
-                    steps_left=left, key=k, greedy=True,
-                    fused_verify=self.mtp_fused, moe_fn=moe_fn),
-                donate_argnums=(4,)) if self.decode_chunk > 1 else None
+
+            # Scanned MTP fast path: `width` speculative iterations (up
+            # to 2*width tokens) per host sync, cache donated.
+            def _make_loop_mtp(width: int):
+                return jax.jit(
+                    lambda p, mp, x, d, c, l, left, k:
+                    model_mod.decode_loop_mtp(
+                        p, mp, cfg, x, d, c, l, width,
+                        steps_left=left, key=k, greedy=True,
+                        fused_verify=self.mtp_fused, moe_fn=moe_fn),
+                    donate_argnums=(4,))
+
+            self._make_loop_mtp = _make_loop_mtp
+
+    def _get_loop(self, width: int):
+        if width not in self._loops:
+            self._loops[width] = self._make_loop(width)
+        return self._loops[width]
+
+    def _get_loop_mtp(self, width: int):
+        if width not in self._loops_mtp:
+            self._loops_mtp[width] = self._make_loop_mtp(width)
+        return self._loops_mtp[width]
+
+    def _effective_chunk(self, refill_pending: bool) -> int:
+        """Continuous batching: the scan width for the next dispatch.
+
+        Shrink from ``decode_chunk`` to where the next host sync can do
+        useful work: ``min(remaining)`` across active slots (a slot
+        finishing mid-scan would burn masked iterations past that point —
+        under MTP a slot needs at least ceil(remaining/2) iterations, so
+        that is the bound), and width 1 when an admission is pending and
+        a slot is free, so the refill lands at the earliest sync. The
+        result snaps DOWN to the pre-jitted width ladder — never up, so
+        no masked tail is ever dispatched on purpose."""
+        k = self.decode_chunk
+        lefts = [info.payload.remaining
+                 for _, info in self.slot_mgr.active_slots()]
+        if lefts:
+            m = min(lefts)
+            need = max(1, (m + 1) // 2) if self.use_mtp else max(1, m)
+            k = min(k, need)
+        if refill_pending and self.slot_mgr.free > 0:
+            k = 1
+        for w in reversed(self._chunk_widths):
+            if w <= k:
+                return w
+        return 1
 
     def free_slot(self) -> Optional[int]:
         return self.slot_mgr.free_slot()
@@ -377,22 +435,31 @@ class DecodeEngine:
         """One host-sync decode turn. Returns requests finished this turn."""
         return self.step_chunk()[0]
 
-    def step_chunk(self) -> Tuple[List[RequestResult],
-                                  List[Tuple[List[int], List[int],
-                                             dict]]]:
+    def step_chunk(self, continuous: bool = False,
+                   refill_pending: bool = False
+                   ) -> Tuple[List[RequestResult],
+                              List[Tuple[List[int], List[int],
+                                         dict, List[int]]]]:
         """One host-sync decode turn: ``decode_chunk`` device iterations per
-        jitted call on the fast path (one otherwise).
+        jitted call on the fast path (one otherwise). ``continuous``
+        enables adaptive chunk sizing (:meth:`_effective_chunk`):
+        ``refill_pending`` then signals a gate-held admission that could
+        land in a free slot, pulling the next host sync forward.
 
         Returns ``(finished, iter_log)``; ``iter_log`` holds one
-        ``(active_rids, finished_rids, tokens_by_rid)`` entry per device
-        iteration actually occupied, so the scheduler can attribute
-        virtual-clock time per-iteration — and credit the tokens each
-        iteration committed (MTP: 1+accepted) — even when many iterations
-        share a single host sync.
+        ``(live_rids, finished_rids, tokens_by_rid, masked_rids)`` entry
+        per device iteration actually dispatched, so the scheduler can
+        attribute virtual-clock time per-iteration to the slots that did
+        work — and credit the tokens each iteration committed (MTP:
+        1+accepted) — while ``masked_rids`` (resident at dispatch but
+        ``lv[i, j]`` false) feed the dead-slot counters without being
+        charged as batch occupancy.
         """
         if self.decode_chunk > 1:
-            return (self._step_chunked_mtp() if self.use_mtp
-                    else self._step_chunked())
+            width = (self._effective_chunk(refill_pending) if continuous
+                     else self.decode_chunk)
+            return (self._step_chunked_mtp(width) if self.use_mtp
+                    else self._step_chunked(width))
 
         self.iters += 1
         active_rids = [info.rid for _, info in self.slot_mgr.active_slots()]
@@ -434,85 +501,102 @@ class DecodeEngine:
             if slot.remaining <= 0:
                 finished.append(slot.result)
                 self.slot_mgr.release(i)
+        # Per-step decode never masks a resident slot (capacity overflow
+        # raises in advance() instead) — the dead-slot set is empty.
+        self.live_slot_iters += len(active_rids)
         return finished, [(active_rids, [r.rid for r in finished],
-                           tokens_by_rid)]
+                           tokens_by_rid, [])]
 
-    def _step_chunked(self) -> Tuple[List[RequestResult],
-                                     List[Tuple[List[int], List[int], dict]]]:
-        """Device-resident fast path: decode_chunk scanned iterations, one
+    def _step_chunked(self, width: int) -> Tuple[
+            List[RequestResult],
+            List[Tuple[List[int], List[int], dict, List[int]]]]:
+        """Device-resident fast path: ``width`` scanned iterations, one
         host sync. Slot accounting is reconciled in DecodeSlotManager.advance
-        as the chunk drains, iteration by iteration."""
+        as the chunk drains, iteration by iteration. The live/masked split
+        per iteration comes from the device's ``lv`` mask: a slot that was
+        resident when the scan was dispatched but masked at iteration j
+        (finished earlier in the chunk, or capacity-frozen) burned a dead
+        device iteration — logged in ``masked_rids``, never charged as
+        live batch occupancy."""
         left = np.zeros((self.b,), np.int32)
+        resident = {}                   # slot index -> rid at dispatch time
         for i, info in self.slot_mgr.active_slots():
-            left[i] = min(info.payload.remaining, self.decode_chunk)
+            left[i] = min(info.payload.remaining, width)
+            resident[i] = info.rid
         emitted, live, self.cur_tok, self.caches, self.cache_len = \
-            self._loop(self.params, self.cur_tok, self.caches,
-                       self.cache_len, jnp.asarray(left))
+            self._get_loop(width)(self.params, self.cur_tok, self.caches,
+                                  self.cache_len, jnp.asarray(left))
         em = np.asarray(emitted)
         lv = np.asarray(live)
 
         finished: List[RequestResult] = []
-        iter_log: List[Tuple[List[int], List[int], dict]] = []
-        for j in range(self.decode_chunk):
-            active_rids = [info.rid for _, info
-                           in self.slot_mgr.active_slots()]
-            if not active_rids:
-                break           # chunk drained early: nothing left to charge
+        iter_log: List[Tuple[List[int], List[int], dict, List[int]]] = []
+        for j in range(width):
             self.iters += 1
+            live_rids: List[int] = []
+            masked_rids: List[int] = []
             fin_this: List[RequestResult] = []
             tokens_by_rid: dict = {}
-            for i, info in list(self.slot_mgr.active_slots()):
+            for i, rid in resident.items():
                 if not lv[i, j]:
+                    masked_rids.append(rid)
                     continue
+                info = self.slot_mgr.get(i)   # live => not yet released
                 slot: _Slot = info.payload
                 slot.result.decode_iters += 1
                 self.slot_mgr.advance(i, 1)
                 slot.result.tokens.append(int(em[i, j]))
                 slot.remaining -= 1
-                tokens_by_rid[info.rid] = 1
+                live_rids.append(rid)
+                tokens_by_rid[rid] = 1
                 if slot.remaining <= 0:
                     fin_this.append(slot.result)
                     self.slot_mgr.release(i)
-            iter_log.append((active_rids, [r.rid for r in fin_this],
-                             tokens_by_rid))
+            self.live_slot_iters += len(live_rids)
+            self.dead_slot_iters += len(masked_rids)
+            iter_log.append((live_rids, [r.rid for r in fin_this],
+                             tokens_by_rid, masked_rids))
             finished.extend(fin_this)
         self._raise_if_capacity_frozen(lv)
         return finished, iter_log
 
-    def _step_chunked_mtp(self) -> Tuple[List[RequestResult],
-                                         List[Tuple[List[int], List[int],
-                                                    dict]]]:
-        """Scanned MTP fast path: ``decode_chunk`` speculative iterations —
-        up to ``2*decode_chunk`` tokens — per host sync. Per-iteration
-        accept/reject ran on-device; here the emitted runs are committed
-        slot by slot, mirroring the per-step MTP accounting (advance 2 on
-        accept, credit the accepted draft token only while the request
-        still wants tokens)."""
+    def _step_chunked_mtp(self, width: int) -> Tuple[
+            List[RequestResult],
+            List[Tuple[List[int], List[int], dict, List[int]]]]:
+        """Scanned MTP fast path: ``width`` speculative iterations — up to
+        ``2*width`` tokens — per host sync. Per-iteration accept/reject
+        ran on-device; here the emitted runs are committed slot by slot,
+        mirroring the per-step MTP accounting (advance 2 on accept, credit
+        the accepted draft token only while the request still wants
+        tokens). Live/masked attribution follows the device ``lv`` mask
+        exactly as in :meth:`_step_chunked`."""
         left = np.zeros((self.b,), np.int32)
+        resident = {}                   # slot index -> rid at dispatch time
         for i, info in self.slot_mgr.active_slots():
             left[i] = info.payload.remaining
+            resident[i] = info.rid
         self.key, sub = jax.random.split(self.key)
         (emitted, accepted, live, self.cur_tok, self.draft_tok, self.caches,
-         self.cache_len) = self._loop_mtp(
+         self.cache_len) = self._get_loop_mtp(width)(
             self.params, self.mtp_params, self.cur_tok, self.draft_tok,
             self.caches, self.cache_len, jnp.asarray(left), sub)
-        em = np.asarray(emitted)        # (B, chunk, 2)
-        acc = np.asarray(accepted)      # (B, chunk)
-        lv = np.asarray(live)           # (B, chunk)
+        em = np.asarray(emitted)        # (B, width, 2)
+        acc = np.asarray(accepted)      # (B, width)
+        lv = np.asarray(live)           # (B, width)
 
         finished: List[RequestResult] = []
-        iter_log: List[Tuple[List[int], List[int], dict]] = []
-        for j in range(self.decode_chunk):
-            active_rids = [info.rid for _, info
-                           in self.slot_mgr.active_slots()]
-            if not active_rids:
-                break           # chunk drained early: nothing left to charge
+        iter_log: List[Tuple[List[int], List[int], dict, List[int]]] = []
+        for j in range(width):
             self.iters += 1
+            live_rids: List[int] = []
+            masked_rids: List[int] = []
             fin_this: List[RequestResult] = []
             tokens_by_rid: dict = {}
-            for i, info in list(self.slot_mgr.active_slots()):
+            for i, rid in resident.items():
                 if not lv[i, j]:
+                    masked_rids.append(rid)
                     continue
+                info = self.slot_mgr.get(i)   # live => not yet released
                 slot: _Slot = info.payload
                 slot.result.decode_iters += 1
                 self.slot_mgr.advance(i, 2 if acc[i, j] else 1)
@@ -525,12 +609,15 @@ class DecodeEngine:
                         slot.result.tokens.append(t)
                         slot.remaining -= 1
                         committed += 1
-                tokens_by_rid[info.rid] = committed
+                live_rids.append(rid)
+                tokens_by_rid[rid] = committed
                 if slot.remaining <= 0:
                     fin_this.append(slot.result)
                     self.slot_mgr.release(i)
-            iter_log.append((active_rids, [r.rid for r in fin_this],
-                             tokens_by_rid))
+            self.live_slot_iters += len(live_rids)
+            self.dead_slot_iters += len(masked_rids)
+            iter_log.append((live_rids, [r.rid for r in fin_this],
+                             tokens_by_rid, masked_rids))
             finished.extend(fin_this)
         self._raise_if_capacity_frozen(lv)
         return finished, iter_log
@@ -598,6 +685,7 @@ class ServingSystem:
                  admission: Optional[str] = None,
                  interleave: Optional[bool] = None,
                  decode_chunk: Optional[int] = None,
+                 continuous_batching: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
                  scheduler_config: Optional[SchedulerConfig] = None):
         self.cfg = cfg
@@ -606,6 +694,7 @@ class ServingSystem:
             ("policy", policy), ("tpot_budget_ms", tpot_budget_ms),
             ("admission", admission), ("interleave_microbatches", interleave),
             ("decode_chunk", decode_chunk),
+            ("continuous_batching", continuous_batching),
             ("decode_policy", decode_router),
             ("decode_rebalance_every", decode_rebalance_every),
             ("autoscale", autoscale),
@@ -666,6 +755,9 @@ class ServingSystem:
             raise ValueError(
                 "decode_chunk is baked into the jitted decode loop at "
                 "ServingSystem construction; build a new system to change it")
+        # continuous_batching is deliberately NOT baked: adaptive widths
+        # jit lazily per width, so flipping it between waves only warms
+        # additional scan programs on demand.
         if new.use_mtp != self.decode.use_mtp:
             raise ValueError(
                 "use_mtp is baked into the decode engine at ServingSystem "
@@ -755,6 +847,67 @@ class ServingSystem:
         results: List[RequestResult] = []
         waiting: List[_PendingAdmission] = []
         eps = 1e-12
+
+        def admit_waiting(mid_turn: bool = False) -> None:
+            """Admit gate-ready requests in FIFO order; the gate may queue
+            or shed (SLO control). Runs once per wave boundary, and — under
+            continuous batching — again after each engine's chunk drains
+            (``mid_turn``), so a freed slot takes the next admission before
+            the next engine steps instead of waiting out the whole turn."""
+            nonlocal waiting
+            still_waiting: List[_PendingAdmission] = []
+            for idx, item in enumerate(waiting):
+                trace = sched.traces[item.result.rid]
+                if open_loop and trace.ready_at > sched.decode_now + eps:
+                    # KV not yet ready on the open-loop clock: hold (FIFO)
+                    still_waiting.extend(waiting[idx:])
+                    break
+                engine = self.pool.select_engine(item.block_keys)
+                decision = sched.admission_decision(trace, engine)
+                if decision == "admit":
+                    slot = self.pool.engines[engine].free_slot()
+                    if slot is None:
+                        # Stale admission: the gate said "admit" but no slot
+                        # is actually free (gate/slot state diverged). Never
+                        # pass slot=None into DecodeSlotManager.allocate —
+                        # requeue and retry after the next decode turn.
+                        still_waiting.extend(waiting[idx:])
+                        break
+                    self.pool.add(engine, slot, item.caches, item.first,
+                                  item.prompt_len, item.result, item.max_new,
+                                  item.block_keys)
+                    sched.on_admit(trace, slot, engine)
+                    if mid_turn:
+                        sched.note_mid_scan_refill()
+                elif decision == "shed":
+                    # Unified shed semantics: like the up-front capacity
+                    # reject, a gate shed returns no tokens — the prefill
+                    # output is dropped, not delivered — and contributes
+                    # nothing to throughput accounting.
+                    item.result.shed = True
+                    sched.on_shed(trace)
+                    sched.on_finish(trace, 0)
+                    results.append(item.result)
+                else:  # wait: keep FIFO order, stop admitting this round
+                    still_waiting.extend(waiting[idx:])
+                    break
+            waiting = still_waiting
+
+        def refill_imminent(engine: int) -> bool:
+            """Could an admission land on ``engine`` around its next chunk?
+            If so the adaptive scan shrinks so the host sync arrives where
+            the refill can happen. Closed loop, any gate-held request
+            qualifies; open loop, only work that becomes ready within
+            roughly one full-width chunk of this engine's clock — a
+            far-future arrival must not degrade the scan to per-step."""
+            if not open_loop:
+                return bool(waiting)
+            horizon = (sched.config.decode_chunk
+                       * sched.cost.step_time(self.pool.engines[engine].active))
+            t = sched.engine_clock(engine) + horizon + eps
+            if any(sched.traces[w.result.rid].ready_at <= t for w in waiting):
+                return True
+            return bool(pending) and pending[0].arrival <= t
         # Worst-case decode cache growth: max_new - 1 iterations, +1 slack
         # for an MTP accept on the final emitted token.
         slack = 1 if self.decode.use_mtp else 0
@@ -801,54 +954,35 @@ class ServingSystem:
                 waiting.append(_PendingAdmission(first, caches,
                                                  len(req.prompt), res,
                                                  req.max_new_tokens, keys))
-            # admit in FIFO order; the gate may queue or shed (SLO control)
-            still_waiting: List[_PendingAdmission] = []
-            for idx, item in enumerate(waiting):
-                trace = sched.traces[item.result.rid]
-                if open_loop and trace.ready_at > sched.decode_now + eps:
-                    # KV not yet ready on the open-loop clock: hold (FIFO)
-                    still_waiting.extend(waiting[idx:])
-                    break
-                engine = self.pool.select_engine(item.block_keys)
-                decision = sched.admission_decision(trace, engine)
-                if decision == "admit":
-                    slot = self.pool.engines[engine].free_slot()
-                    if slot is None:
-                        # Stale admission: the gate said "admit" but no slot
-                        # is actually free (gate/slot state diverged). Never
-                        # pass slot=None into DecodeSlotManager.allocate —
-                        # requeue and retry after the next decode turn.
-                        still_waiting.extend(waiting[idx:])
-                        break
-                    self.pool.add(engine, slot, item.caches, item.first,
-                                  item.prompt_len, item.result, item.max_new,
-                                  item.block_keys)
-                    sched.on_admit(trace, slot, engine)
-                elif decision == "shed":
-                    item.result.shed = True
-                    item.result.tokens.append(item.first)
-                    sched.on_shed(trace)
-                    sched.on_finish(trace, len(item.result.tokens))
-                    results.append(item.result)
-                else:  # wait: keep FIFO order, stop admitting this round
-                    still_waiting.extend(waiting[idx:])
-                    break
-            waiting = still_waiting
+            admit_waiting()
             # decode turn: decode_chunk device iterations per host sync on
             # the fast path; every engine with active slots steps, and each
             # engine's virtual clock is charged per iteration so trace/SLO
-            # semantics match per-step single-engine decode.
+            # semantics match per-step single-engine decode. Continuous
+            # batching steps engines individually (adaptive scan width) and
+            # re-runs admission after each engine's chunk drains, so freed
+            # slots refill mid-turn — before the next engine steps — while
+            # per-engine clock charging and the autoscaler's demand signal
+            # (evaluated once per turn, below) stay exactly as in the
+            # wave-shaped loop.
             if self.pool.active:
                 decode_turns += 1
+                continuous = sched.config.continuous_batching
                 stepped = []
-                for engine, finished, iter_log in self.pool.step_all():
+                for engine in list(self.pool.live_ids):
+                    if not self.pool.engines[engine].active:
+                        continue
+                    finished, iter_log = self.pool.step_engine(
+                        engine, continuous=continuous,
+                        refill_pending=continuous and refill_imminent(engine))
                     stepped.append(engine)
-                    for active_rids, fin_rids, tokens_by_rid in iter_log:
-                        sched.on_decode_step(active_rids, fin_rids,
-                                             tokens_by_rid, engine=engine)
+                    for entry in iter_log:
+                        sched.on_decode_step(*entry, engine=engine)
                     for r in finished:
                         sched.on_finish(sched.traces[r.rid], len(r.tokens))
                     results.extend(finished)
+                    if continuous and waiting:
+                        admit_waiting(mid_turn=True)
                 sched.sync_idle_clocks(stepped)
                 if rebalance_every and decode_turns % rebalance_every == 0:
                     moved = self.pool.rebalance(self.transfer)

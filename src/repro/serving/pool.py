@@ -307,6 +307,21 @@ class DecodePool:
         self.router.on_admit(engine, block_keys)
 
     # -- stepping ----------------------------------------------------------
+    def step_engine(self, engine: int, continuous: bool = False,
+                    refill_pending: bool = False) -> Tuple[list, list]:
+        """One host-sync chunk on a single engine (the continuous-batching
+        serve loop steps engines individually so freed slots can be
+        refilled *between* engine chunks within one decode turn).
+        ``continuous``/``refill_pending`` thread through to
+        :meth:`~repro.serving.engine.DecodeEngine.step_chunk`'s adaptive
+        chunk sizing. Returns ``(finished, iter_log)``."""
+        eng = self.engines[engine]
+        finished, iter_log = eng.step_chunk(continuous=continuous,
+                                            refill_pending=refill_pending)
+        for r in finished:
+            self._request_keys.pop(r.rid, None)
+        return finished, iter_log
+
     def step_all(self) -> List[Tuple[int, list, list]]:
         """One decode turn across the pool: every live engine with active
         slots runs one host-sync chunk. Returns ``(engine, finished,
@@ -315,9 +330,7 @@ class DecodePool:
         out = []
         for e, eng in enumerate(self.engines):
             if self._live[e] and eng.active:
-                finished, iter_log = eng.step_chunk()
-                for r in finished:
-                    self._request_keys.pop(r.rid, None)
+                finished, iter_log = self.step_engine(e)
                 out.append((e, finished, iter_log))
         return out
 
@@ -459,6 +472,8 @@ class DecodePool:
     def engine_stats(self) -> List[Dict[str, int]]:
         return [{"engine": e, "live": self._live[e], "active": eng.active,
                  "iters": eng.iters,
+                 "live_slot_iters": eng.live_slot_iters,
+                 "dead_slot_iters": eng.dead_slot_iters,
                  "slots_acquired": eng.slot_mgr.acquired,
                  "slots_released": eng.slot_mgr.released}
                 for e, eng in enumerate(self.engines)]

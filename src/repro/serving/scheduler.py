@@ -71,6 +71,8 @@ class RequestTrace:
     decode_end: float = 0.0
     decode_iters: int = 0
     decode_tokens: int = 0   # committed decode tokens (MTP: 1+accepted/iter)
+    masked_iters: int = 0    # device iterations burned while slot-resident
+    #                          but masked (lv[i, j] false): dead slot time
     decode_seconds: float = 0.0
     decode_engine: int = -1  # pool engine currently decoding the request
     migrations: int = 0      # cross-engine KV migrations mid-decode
@@ -470,6 +472,11 @@ class SLOTracker:
     def summary(self) -> Dict[str, float]:
         ttfts = [t.ttft for t in self.finished]
         tpots = [t.tpot for t in self.finished if t.decode_iters > 0]
+        # Queue statistics span finished AND shed traces: a request that
+        # queued long and was then shed is exactly the queueing pressure
+        # the percentile must not hide (shed traces stamp their queue time
+        # at the shed instant).
+        queues = [t.queue_seconds for t in self.finished + self.shed]
         return {
             "completed": len(self.finished),
             "shed": len(self.shed),
@@ -478,8 +485,9 @@ class SLOTracker:
             "tpot_p50_s": self._pct(tpots, 50),
             "tpot_p99_s": self._pct(tpots, 99),
             "tpot_max_s": max(tpots) if tpots else float("nan"),
-            "queue_p99_s": self._pct([t.queue_seconds
-                                      for t in self.finished], 99),
+            "queue_p99_s": self._pct(queues, 99),
+            "queue_p99_shed_s": self._pct([t.queue_seconds
+                                           for t in self.shed], 99),
         }
 
 
@@ -541,6 +549,16 @@ class SchedulerConfig:
     # join and the clock is reconciled only at chunk boundaries) for host
     # round-trips amortized over `decode_chunk` tokens.
     decode_chunk: int = 1
+    # Continuous batching on the chunked fast path: before each device
+    # dispatch the engine shrinks the effective scan width (to a pre-jitted
+    # width <= decode_chunk) when min(remaining) across active slots is
+    # below the chunk or a gate-held admission could land in a free slot,
+    # and the serve loop refills freed slots immediately after each
+    # engine's chunk drains (mid-scan refill) instead of once per wave
+    # boundary. Token-identical to the wave-shaped loop; admissions land
+    # strictly earlier. Control-plane only (no re-jit), so it may be
+    # flipped between waves via reconfigure_scheduler.
+    continuous_batching: bool = False
     # MTP speculative decoding: charge the virtual clock the paper's ~1.44x
     # per-iteration verification cost while the admission gate credits
     # 1+accept tokens per iteration (a decode_cost with explicit MTP terms
@@ -629,6 +647,14 @@ class Scheduler:
         self._eng_busy = [0.0] * self.n_decode
         self._eng_steps = [0] * self.n_decode
         self._eng_tokens = [0] * self.n_decode
+        # Dead-slot observability: slot-iterations that did work vs slot-
+        # iterations burned masked (resident at dispatch, lv false), plus
+        # the number of admissions that landed mid-scan (continuous
+        # batching refills between engine chunks within one decode turn).
+        self.live_slot_iters = 0
+        self.masked_slot_iters = 0
+        self._eng_masked = [0] * self.n_decode
+        self.mid_scan_refills = 0
         self.migrations = 0
         self.migration_seconds = 0.0
         # Autoscale bookkeeping: scale events + the live-engine-count
@@ -710,6 +736,15 @@ class Scheduler:
 
     def on_shed(self, trace: RequestTrace) -> None:
         trace.shed = True
+        # Stamp the shed instant so queue statistics see the time this
+        # request spent waiting before the gate gave up on it (a gate shed
+        # happens at the pool frontier; an up-front capacity reject never
+        # prefilled, so its queue time is legitimately zero).
+        if trace.prefill_instance >= 0:
+            t = max(trace.ready_at, self.decode_now)
+        else:
+            t = trace.ready_at
+        trace.decode_admit = trace.decode_end = t
         self.tracker.record(trace)
         if trace.prefill_instance >= 0:     # capacity rejects never prefill
             self.router.on_complete(trace.prefill_instance)
@@ -717,20 +752,39 @@ class Scheduler:
     def on_decode_step(self, active_rids: Sequence[int],
                        finished_rids: Sequence[int],
                        tokens_by_rid: Optional[Dict[int, int]] = None,
+                       masked_rids: Sequence[int] = (),
                        engine: int = 0) -> float:
         """Advance one engine's virtual clock by one decode iteration.
 
         The clock is charged per *iteration* (MTP: ×``mtp_iter_factor``)
-        while each request is credited the tokens it actually committed —
-        ``tokens_by_rid`` from the engine (MTP: 1+accepted; omitted: 1 per
-        active request) — so TPOT traces honestly reflect speculation.
+        for the **live** batch — ``active_rids`` are the slots whose
+        ``lv[i, j]`` was true — while each request is credited the tokens
+        it actually committed — ``tokens_by_rid`` from the engine (MTP:
+        1+accepted; omitted: 1 per active request) — so TPOT traces
+        honestly reflect speculation. ``masked_rids`` are slots that were
+        resident at dispatch but masked this iteration (left-exhausted or
+        capacity-frozen): they burned a device iteration without doing
+        work, so they count toward ``dead_slot_rate`` but are *not*
+        charged batch occupancy on the clock or the trace. An iteration
+        whose live set is empty (pure dead tail of a chunk) advances
+        nothing but the dead-slot counters.
         """
-        dt = self.cost.step_time(len(active_rids))
-        self._decode_now[engine] += dt
-        self.decode_busy += dt
-        self.decode_steps += 1
-        self._eng_busy[engine] += dt
-        self._eng_steps[engine] += 1
+        if active_rids:
+            dt = self.cost.step_time(len(active_rids))
+            self._decode_now[engine] += dt
+            self.decode_busy += dt
+            self.decode_steps += 1
+            self._eng_busy[engine] += dt
+            self._eng_steps[engine] += 1
+        else:
+            dt = 0.0
+        self.live_slot_iters += len(active_rids)
+        self.masked_slot_iters += len(masked_rids)
+        self._eng_masked[engine] += len(masked_rids)
+        for rid in masked_rids:
+            tr = self.traces.get(rid)
+            if tr is not None:
+                tr.masked_iters += 1
         for rid in active_rids:
             tr = self.traces[rid]
             tr.decode_iters += 1
@@ -761,6 +815,15 @@ class Scheduler:
         trace.migration_seconds += seconds
         self.migrations += 1
         self.migration_seconds += seconds
+
+    def engine_clock(self, engine: int) -> float:
+        """One engine's virtual clock (the pool frontier is their min)."""
+        return self._decode_now[engine]
+
+    def note_mid_scan_refill(self) -> None:
+        """An admission landed between engine chunks within one decode
+        turn (continuous batching) rather than at a wave boundary."""
+        self.mid_scan_refills += 1
 
     def advance_clock(self, t: float) -> None:
         """Open-loop serving: fast-forward the idle decode pool to the next
@@ -799,6 +862,7 @@ class Scheduler:
         self._eng_busy.append(0.0)
         self._eng_steps.append(0)
         self._eng_tokens.append(0)
+        self._eng_masked.append(0)
         return e
 
     def set_engine_live(self, engine: int, live: bool) -> None:
@@ -865,6 +929,15 @@ class Scheduler:
         if self.decode_steps:
             s["tokens_per_decode_step"] = (self.decode_token_count
                                            / self.decode_steps)
+        # Dead-slot observability: fraction of slot-iterations the device
+        # spent on resident-but-masked slots (continuous batching exists
+        # to drive this toward zero).
+        occupied = self.live_slot_iters + self.masked_slot_iters
+        s["live_slot_iters"] = self.live_slot_iters
+        s["masked_slot_iters"] = self.masked_slot_iters
+        s["dead_slot_rate"] = (self.masked_slot_iters / occupied
+                               if occupied else 0.0)
+        s["mid_scan_refills"] = self.mid_scan_refills
         if self.gate.max_batch is not None:
             s["admitted_batch_cap"] = self.gate.max_batch
         if self.n_decode > 1:
@@ -874,6 +947,7 @@ class Scheduler:
             s["migrations"] = self.migrations
             s["engine_decode_steps"] = list(self._eng_steps)
             s["engine_decode_tokens"] = list(self._eng_tokens)
+            s["engine_masked_iters"] = list(self._eng_masked)
             s["engine_busy_s"] = [round(b, 9) for b in self._eng_busy]
             s["engine_util"] = [round(b / makespan, 4)
                                 for b in self._eng_busy]

@@ -25,7 +25,10 @@ def poisson_requests(n_requests: int, rate_rps: float, prompt_len: int,
     at ``rate_rps`` requests per (virtual) second.
 
     ``shared_prefix`` tokens are common across all prompts so the stream
-    also exercises EMS context-cache reuse under load. ``seed`` is a
+    also exercises EMS context-cache reuse under load;
+    ``shared_prefix == prompt_len`` makes every prompt identical — the
+    fully-cached multi-turn re-entry stream the EMS benches replay.
+    ``seed`` is a
     *required* keyword: every arrival gap and prompt token comes from one
     PRNG seeded with it, so the stream — and therefore the scheduler's
     virtual timeline and every SLO statistic derived from it — is exactly
@@ -35,8 +38,8 @@ def poisson_requests(n_requests: int, rate_rps: float, prompt_len: int,
         raise ValueError("n_requests must be positive")
     if rate_rps <= 0:
         raise ValueError("rate_rps must be positive")
-    if not 0 <= shared_prefix < prompt_len:
-        raise ValueError("shared_prefix must be in [0, prompt_len)")
+    if not 0 <= shared_prefix <= prompt_len:
+        raise ValueError("shared_prefix must be in [0, prompt_len]")
     rng = np.random.RandomState(seed)
     arrivals = start + np.cumsum(rng.exponential(1.0 / rate_rps, n_requests))
     prefix = list(rng.randint(0, vocab_size, shared_prefix))

@@ -311,8 +311,12 @@ def test_poisson_requests_generator():
     assert 0.2 / 100 < gaps.mean() < 5.0 / 100
     with pytest.raises(ValueError):
         poisson_requests(4, 0.0, 12, 4, 200, seed=0)
+    # shared_prefix == prompt_len is legal (fully-cached re-entry stream);
+    # only a prefix longer than the prompt is rejected
+    full = poisson_requests(4, 10.0, 12, 4, 200, seed=0, shared_prefix=12)
+    assert all(r.prompt == full[0].prompt for r in full)
     with pytest.raises(ValueError):
-        poisson_requests(4, 10.0, 12, 4, 200, seed=0, shared_prefix=12)
+        poisson_requests(4, 10.0, 12, 4, 200, seed=0, shared_prefix=13)
 
 
 def test_open_loop_burst_queues_and_matches_greedy(qwen):

@@ -190,10 +190,12 @@ def test_shed_mode_sheds_when_budget_tightens(granite):
     assert s_loose["shed"] == 0
     assert s_tight["shed"] > 0                    # gate demonstrably sheds
     assert s_tight["completed"] + s_tight["shed"] == 6
-    # shed requests still return their prefill-produced first token
+    # a gate shed is a rejection, same as a capacity reject: no tokens
+    # are delivered (the prefill-produced first token is discarded, not
+    # leaked into throughput) and no decode iterations were spent
     for r in tight:
         if r.shed:
-            assert len(r.tokens) == 1 and r.decode_iters == 0
+            assert r.tokens == [] and r.decode_iters == 0
     # completed requests under the tight budget still meet it
     assert s_tight["tpot_max_s"] <= 6.0e-3 + 1e-12
 
