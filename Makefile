@@ -31,10 +31,12 @@ bench-slo:
 # bench_mtp runs after bench_decode_throughput: it merges the MTP section
 # (acceptance rate + fused-MTP speedup) into the same BENCH_decode.json.
 # bench-check (its own CI step, and part of `make ci`) asserts the decode
-# artifact is schema 5: the pool autoscale section (engine-count timeline
-# + scale-event counts) AND the continuous_batching section (dead-slot
-# rate before/after, mid-scan refill counts, token identity, zero TPOT
-# budget violations).
+# artifact is schema 6: the pool autoscale section (engine-count timeline
+# + scale-event counts), the continuous_batching section (dead-slot rate
+# before/after, mid-scan refill counts, token identity, zero TPOT budget
+# violations) AND the fault_tolerance section (crash fired, every lost
+# request recovered by replay, recovery-TTFT percentiles present, faulted
+# tokens bit-identical to the fault-free reference).
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_mtp --smoke
@@ -42,7 +44,7 @@ bench-smoke:
 
 bench-check:
 	$(PY) -c "import json; d = json.load(open('BENCH_decode.json')); \
-	assert d['schema'] == 5, f'BENCH_decode.json schema {d[\"schema\"]} != 5'; \
+	assert d['schema'] == 6, f'BENCH_decode.json schema {d[\"schema\"]} != 6'; \
 	a = d['pool']['autoscale']; \
 	assert a['engine_count_timeline'] and 'scale_grows' in a \
 	and 'scale_shrinks' in a, 'autoscale section incomplete'; \
@@ -57,10 +59,24 @@ bench-check:
 	and 'mid_scan_refills' in cb['before'], 'refill counts missing'; \
 	assert cb['tpot_budget_violations'] == 0, \
 	f\"TPOT gate violated {cb['tpot_budget_violations']}x under CB\"; \
-	print('BENCH_decode.json schema 5 OK:', \
+	ft = d['fault_tolerance']; \
+	assert ft['engine_failures'] >= 1 and ft['recoveries'] >= 1, \
+	'fault plan fired no mid-decode crash/recovery'; \
+	assert ft['tokens_replayed'] >= 1 and ft['retries'] >= 1, \
+	'replay/retry counters missing or zero'; \
+	assert ft['recovery_ttft_p50_s'] is not None \
+	and ft['recovery_ttft_p99_s'] is not None, \
+	'recovery-TTFT percentiles missing'; \
+	assert ft['completed'] == ft['completed_fault_free'], \
+	'faulted run lost requests vs fault-free reference'; \
+	assert ft['tokens_identical_to_fault_free'] is True, \
+	'recovered tokens diverged from the fault-free run'; \
+	print('BENCH_decode.json schema 6 OK:', \
 	f\"{a['scale_grows']} grows, {a['scale_shrinks']} shrinks, \" \
 	f\"peak {a['peak_engines']} engines; dead_slot_rate \" \
 	f\"{cb['before']['dead_slot_rate']} -> {cb['after']['dead_slot_rate']} \" \
-	f\"({cb['after']['mid_scan_refills']} mid-scan refills)\")"
+	f\"({cb['after']['mid_scan_refills']} mid-scan refills); \" \
+	f\"{ft['engine_failures']} failures -> {ft['recoveries']} recoveries, \" \
+	f\"{ft['tokens_replayed']} tokens replayed, {ft['retries']} retries\")"
 
 ci: smoke test bench-smoke bench-check

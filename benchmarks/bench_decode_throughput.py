@@ -115,6 +115,7 @@ def _live_rows() -> None:
     artifact["continuous_batching"] = _continuous_rows()
     artifact["pool"] = _pool_rows()
     artifact["pool"]["autoscale"] = _autoscale_rows()
+    artifact["fault_tolerance"] = _fault_rows()
     path = write_bench_artifact("decode", artifact)
     emit("decode_tput", "artifact", path, "")
 
@@ -261,6 +262,54 @@ def _autoscale_rows() -> dict:
          f"migrations={section['migrations']}")
     emit("decode_tput", "autoscale_tokens_identical_to_fixed_pool",
          identical, f"fixed_engines={AUTOSCALE_MAX}")
+    return section
+
+
+def _fault_rows() -> dict:
+    """Fault-tolerance smoke (schema 6): the canonical autoscale burst
+    through a 2-engine pool under the canonical fault plan (mid-decode
+    engine crash + consecutive transfer timeouts + a straggler window),
+    against the identical system run fault-free. Asserted downstream by
+    ``make bench-check``: the crash fires, every lost request is recovered
+    by replay re-prefill, recovery-TTFT percentiles are reported, and the
+    faulted run's emitted tokens are bit-identical to the fault-free
+    reference (greedy determinism survives failure)."""
+    from benchmarks.common import FAULT_PLAN_EVENTS, live_fault_serve
+
+    ref_results, ref_sched, _, _ = live_fault_serve(events=None)
+    results, scheduler, system, injector = live_fault_serve()
+    s = scheduler.summary()
+    ref_tokens = {r.rid: list(r.tokens) for r in ref_results if not r.shed}
+    tokens = {r.rid: list(r.tokens) for r in results if not r.shed}
+    identical = tokens == ref_tokens
+    section = {
+        "plan": [dict(e) for e in FAULT_PLAN_EVENTS],
+        "injected": injector.summary(),
+        "engine_failures": s["engine_failures"],
+        "recoveries": s["recoveries"],
+        "tokens_replayed": s["tokens_replayed"],
+        "retries": s["retries"],
+        "transfer_timeouts": s["transfer_timeouts"],
+        "transfer_corruptions": s["transfer_corruptions"],
+        "recovery_ttft_p50_s": s.get("recovery_ttft_p50_s"),
+        "recovery_ttft_p99_s": s.get("recovery_ttft_p99_s"),
+        "completed": s["completed"],
+        "shed": s["shed"],
+        "completed_fault_free": ref_sched.summary()["completed"],
+        "engines_respawned": sum(
+            1 for e in scheduler.scale_events if e["action"] == "grow"),
+        "tokens_identical_to_fault_free": identical,
+    }
+    emit("decode_tput", "fault_recoveries", s["recoveries"],
+         f"failures={s['engine_failures']};replayed={s['tokens_replayed']}")
+    emit("decode_tput", "fault_transfer_retries", s["retries"],
+         f"timeouts={s['transfer_timeouts']};"
+         f"corruptions={s['transfer_corruptions']}")
+    emit("decode_tput", "fault_recovery_ttft_p99_ms",
+         round((s.get("recovery_ttft_p99_s") or 0.0) * 1e3, 3),
+         f"p50_ms={round((s.get('recovery_ttft_p50_s') or 0.0) * 1e3, 3)}")
+    emit("decode_tput", "fault_tokens_identical_to_fault_free", identical,
+         f"completed={s['completed']}/{section['completed_fault_free']}")
     return section
 
 

@@ -64,16 +64,18 @@ def emit(name: str, metric: str, value, derived: str = "") -> None:
 REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def write_bench_artifact(name: str, payload: Dict, schema: int = 5) -> str:
+def write_bench_artifact(name: str, payload: Dict, schema: int = 6) -> str:
     """Persist a benchmark record as BENCH_<name>.json at the repo root so
     the perf trajectory is trackable PR-over-PR. Schema 2 added the MTP
     section (acceptance rate + speedup) to the decode artifact; schema 3
     added the decode-pool section (per-engine throughput + routing policy +
     migration counts); schema 4 added the pool autoscale section
     (engine-count timeline + scale-event counts + fixed-pool token
-    identity); schema 5 adds the continuous-batching section
+    identity); schema 5 added the continuous-batching section
     (dead_slot_rate before/after, mid-scan refill counts, per-step token
-    identity)."""
+    identity); schema 6 adds the fault-tolerance section (engine failures,
+    replay recoveries, transfer retries, recovery-TTFT percentiles, and
+    token identity of the faulted run against its fault-free reference)."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump({"schema": schema, "bench": name, **payload}, f, indent=1,
@@ -82,7 +84,7 @@ def write_bench_artifact(name: str, payload: Dict, schema: int = 5) -> str:
     return path
 
 
-def update_bench_artifact(name: str, extra: Dict, schema: int = 5) -> str:
+def update_bench_artifact(name: str, extra: Dict, schema: int = 6) -> str:
     """Merge ``extra`` into an existing BENCH_<name>.json (or start a fresh
     one) — benches that contribute sections to a shared artifact (bench_mtp
     -> BENCH_decode.json) use this instead of clobbering it."""
@@ -318,6 +320,51 @@ def live_autoscale_serve(*, requests=None, min_engines: int = 1,
             decode_cost=calibrated_decode_cost(LIVE_ARCH)))
     results = system.serve(reqs, open_loop=True)
     return results, system.scheduler, system
+
+
+#: The canonical bench fault plan: one mid-decode crash (engine 1), two
+#: consecutive transfer timeouts (exercises backoff + retry), and a 2×
+#: straggler window on engine 0. Shared by bench_decode_throughput and
+#: bench_tpot_slo so both report the same failure sequence.
+FAULT_PLAN_EVENTS = (
+    {"kind": "engine_crash", "engine": 1, "at": 0.02},
+    {"kind": "transfer_timeout", "op": "transfer", "after": 2, "count": 2},
+    {"kind": "slow_engine", "engine": 0, "at": 0.01, "factor": 2.0,
+     "duration": 0.01},
+)
+
+
+def live_fault_serve(*, events=FAULT_PLAN_EVENTS, requests=None,
+                     min_engines: int = 2, max_engines: int = 3,
+                     decode_batch: int = 2, max_new: int = AUTOSCALE_MAX_NEW,
+                     degrade_shed_queue_s=None):
+    """Open-loop burst (default: the autoscale bench burst, so the
+    fault-free reference is the same stream) through a 2-engine autoscaling
+    pool under a deterministic fault plan; returns (results, scheduler,
+    system, injector). ``events=None`` runs the identical system fault-free
+    — the token-identity reference. Not cached: crashes mutate the engine
+    roster. ``min_engines=2`` guarantees the crash drops the pool below the
+    floor, so the bench provably exercises the respawn path."""
+    from repro.serving import SchedulerConfig, ServingSystem
+    from repro.serving.faults import FaultEvent, FaultInjector, FaultPlan
+
+    cfg, params = live_model()
+    reqs = autoscale_burst(max_new=max_new) if requests is None else requests
+    injector = None
+    if events is not None:
+        injector = FaultInjector(
+            FaultPlan([FaultEvent(**dict(e)) for e in events]))
+    system = ServingSystem(
+        params, cfg, n_prefill=2, decode_batch=decode_batch,
+        capacity=LIVE_PROMPT_LEN + max_new + 16,
+        decode_engines=2, autoscale=True,
+        min_engines=min_engines, max_engines=max_engines,
+        degrade_shed_queue_s=degrade_shed_queue_s,
+        fault_injector=injector,
+        scheduler_config=SchedulerConfig(
+            decode_cost=calibrated_decode_cost(LIVE_ARCH)))
+    results = system.serve(reqs, open_loop=True)
+    return results, system.scheduler, system, injector
 
 
 CB_CHUNK = 4       # scan width for the continuous-batching comparison

@@ -9,7 +9,9 @@
       [--autoscale --min-engines 1 --max-engines 4] \
       [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
       [--decode-chunk 4 [--continuous-batching]] [--prefill-chunk 32] \
-      [--poisson-rate 100 [--open-loop]] [--seed 0] [--trace]
+      [--poisson-rate 100 [--open-loop]] [--seed 0] [--trace] \
+      [--fault-plan random|@plan.json|'[{...}]' [--fault-seed 0] \
+       [--degrade-shed-queue-s 0.05]]
 """
 from __future__ import annotations
 
@@ -25,6 +27,7 @@ from repro.core import init_mtp_params
 from repro.mempool import ContextCache, MemoryPool
 from repro.models import init_params
 from repro.serving import Request, ServingSystem
+from repro.serving.faults import FaultInjector, FaultPlan
 from repro.serving.pool import DECODE_ROUTERS
 from repro.serving.scheduler import ROUTERS
 
@@ -100,6 +103,17 @@ def main() -> None:
                          "(implied by --poisson-rate)")
     ap.add_argument("--trace", action="store_true",
                     help="dump the structured per-request trace as JSON")
+    ap.add_argument("--fault-plan", default=None,
+                    help="deterministic fault schedule: 'random' (seeded by "
+                         "--fault-seed), '@path/to/plan.json', or inline "
+                         "JSON (a list of fault events or {'events': [...]})")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for --fault-plan random and for the "
+                         "injector's derived streams")
+    ap.add_argument("--degrade-shed-queue-s", type=float, default=None,
+                    help="graceful degradation: shed any queued admission "
+                         "held longer than this many virtual seconds "
+                         "(bounds the backlog when capacity is lost)")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))
@@ -136,6 +150,18 @@ def main() -> None:
             prompts=np.asarray([r.prompt for r in reqs], np.int32),
             gen_len=max(16, 2 * args.max_new))
 
+    injector = None
+    if args.fault_plan is not None:
+        # Horizon estimate for the seeded random plan: enough virtual time
+        # that a mid-decode crash lands while requests are still in flight.
+        horizon = max(0.05, args.n_requests * args.max_new * 1.5e-3
+                      / max(1, args.decode_engines))
+        plan = FaultPlan.load(args.fault_plan, seed=args.fault_seed,
+                              n_engines=args.decode_engines,
+                              horizon_s=horizon)
+        injector = FaultInjector(plan, seed=args.fault_seed)
+        print(f"fault plan ({len(plan.events)} events): {plan.to_json()}")
+
     system = ServingSystem(params, cfg, n_prefill=2,
                            decode_batch=args.decode_batch,
                            capacity=args.prompt_len + args.max_new + 8,
@@ -156,7 +182,9 @@ def main() -> None:
                            decode_chunk=args.decode_chunk,
                            continuous_batching=args.continuous_batching
                            or None,
-                           prefill_chunk=args.prefill_chunk)
+                           prefill_chunk=args.prefill_chunk,
+                           degrade_shed_queue_s=args.degrade_shed_queue_s,
+                           fault_injector=injector)
     t0 = time.time()
     results = system.serve(reqs, open_loop=open_loop)
     dt = time.time() - t0
@@ -177,7 +205,8 @@ def main() -> None:
         print("decode pool: " + ", ".join(
             f"engine{st['engine']} active={st['active']} "
             f"iters={st['iters']} util={util[st['engine']] if util else 0}"
-            + ("" if st["live"] else " (parked)")
+            + ("" if st["live"] else
+               " (dead)" if st.get("dead") else " (parked)")
             for st in system.pool.engine_stats()))
         print(f"migrations: {system.pool.migrations} "
               f"({system.pool.migrated_bytes/2**20:.2f} MiB over RDMA plane)")
@@ -198,6 +227,14 @@ def main() -> None:
         print("pool:", cc.pool.stats())
     print("transfer:", system.transfer.transfers, "handoffs,",
           f"{system.transfer.bytes_moved/2**20:.1f} MiB over RDMA plane")
+    if injector is not None:
+        xfer = system.transfer
+        print("faults: "
+              + ", ".join(f"{k}={v}" for k, v in injector.summary().items())
+              + f"; recoveries={summary.get('recoveries', 0)} "
+              f"tokens_replayed={summary.get('tokens_replayed', 0)} "
+              f"retries={xfer.retries} timeouts={xfer.timeouts} "
+              f"corruptions={xfer.corruptions}")
     if args.trace:
         print(json.dumps(system.scheduler.trace_records(), indent=1))
 

@@ -28,6 +28,7 @@ from repro.serving.pool import (  # noqa: F401
     CacheAffinityRouter,
     DecodePool,
     DecodePoolRouter,
+    DrainError,
     LeastLoadedSlotsRouter,
     PoolAutoscaler,
     PoolRoundRobinRouter,
@@ -36,7 +37,15 @@ from repro.serving.pool import (  # noqa: F401
 from repro.serving.workload import poisson_requests  # noqa: F401
 from repro.serving.transfer import (  # noqa: F401
     KVTransferEngine,
+    TransferCorruption,
+    TransferError,
+    TransferTimeout,
     connection_map,
     prefill_source_rank,
     transfer_balance,
+)
+from repro.serving.faults import (  # noqa: F401
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
 )

@@ -8,6 +8,7 @@ blocks for the EMS context cache.
 from __future__ import annotations
 
 import functools
+import zlib
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -116,6 +117,20 @@ def pack_blocks(cfg: ModelConfig, caches, n_blocks: int,
         return []
     flat = np.asarray(_pack_blocks(cfg, caches, n_blocks, block))
     return [flat[bi] for bi in range(n_blocks)]
+
+
+def fingerprint(payload: Any) -> int:
+    """Order-stable CRC32 over every array leaf's raw bytes — the
+    integrity check :class:`~repro.serving.transfer.KVTransferEngine`
+    verifies on delivery before a migrated/transferred payload is allowed
+    to land in a destination cache. Non-array leaves (lengths folded into
+    scalars etc.) are skipped exactly as :func:`cache_nbytes` skips them."""
+    crc = 0
+    for leaf in jax.tree.leaves(payload):
+        if hasattr(leaf, "dtype"):
+            crc = zlib.crc32(
+                np.ascontiguousarray(np.asarray(leaf)).tobytes(), crc)
+    return crc
 
 
 def pack_request(cfg: ModelConfig, req_slice) -> np.ndarray:

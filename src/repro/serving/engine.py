@@ -34,7 +34,9 @@ from repro.core import mtp as mtp_mod
 from repro.mempool.context_cache import ContextCache
 from repro.models import model as model_mod
 from repro.serving import cache_ops
-from repro.serving.pool import DecodePool, PoolAutoscaler, make_decode_router
+from repro.serving.faults import FaultInjector
+from repro.serving.pool import (DecodePool, DrainError, PoolAutoscaler,
+                                make_decode_router)
 from repro.serving.scheduler import (
     DecodeSlotManager,
     MicrobatchInterleaver,
@@ -42,7 +44,7 @@ from repro.serving.scheduler import (
     SchedulerConfig,
     SlotError,
 )
-from repro.serving.transfer import KVTransferEngine
+from repro.serving.transfer import KVTransferEngine, TransferError
 
 
 @dataclasses.dataclass
@@ -648,6 +650,12 @@ class _PendingAdmission:
     result: RequestResult
     max_new: int
     block_keys: Tuple[str, ...] = ()
+    # Engine-failure recovery: a recovered request re-enters the admission
+    # queue with its replay KV ready at an explicit instant (the trace's
+    # ready_at property keeps describing the ORIGINAL prefill handoff) and
+    # is re-admitted via on_readmit so decode_admit/TTFT stay untouched.
+    ready_at: Optional[float] = None
+    recovered: bool = False
 
 
 class ServingSystem:
@@ -687,7 +695,9 @@ class ServingSystem:
                  decode_chunk: Optional[int] = None,
                  continuous_batching: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
-                 scheduler_config: Optional[SchedulerConfig] = None):
+                 degrade_shed_queue_s: Optional[float] = None,
+                 scheduler_config: Optional[SchedulerConfig] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         self.cfg = cfg
         self.cc = context_cache
         overrides = {k: v for k, v in (
@@ -699,6 +709,7 @@ class ServingSystem:
             ("decode_rebalance_every", decode_rebalance_every),
             ("autoscale", autoscale),
             ("min_engines", min_engines), ("max_engines", max_engines),
+            ("degrade_shed_queue_s", degrade_shed_queue_s),
         ) if v is not None}
         # use_mtp is engine state, not policy: the scheduler's MTP cost
         # accounting must always match what the decode engine actually runs
@@ -734,8 +745,16 @@ class ServingSystem:
                                         decode_engines),
             engine_factory=engine_factory)
         self.decode = engines[0]       # single-engine compatibility alias
-        self.transfer = KVTransferEngine()
+        self.faults = fault_injector
+        self.transfer = KVTransferEngine(
+            fault_hook=None if self.faults is None
+            else self.faults.transfer_fault)
         self.scheduler = Scheduler(n_prefill, self.pool.slot_mgrs, sched_cfg)
+        # In-flight registry: rid -> original Request, kept from KV handoff
+        # until decode finish/shed. Engine-failure recovery needs the
+        # prompt and token budget to rebuild a crashed slot by replay
+        # re-prefill; nothing else retains them once prefill returns.
+        self._inflight: dict = {}
 
     def reconfigure_scheduler(self, scheduler_config: SchedulerConfig) -> None:
         """Swap policy/SLO configuration between serve() waves without
@@ -785,6 +804,94 @@ class ServingSystem:
             self.scheduler.on_migrate(trace, src_e, dst_engine, seconds)
         return seconds
 
+    # -- fault tolerance ---------------------------------------------------
+    def _apply_faults(self) -> List["_PendingAdmission"]:
+        """One injector evaluation: re-assert straggler factors from each
+        engine's clock, then fire any due engine crashes (a crash is
+        detected at the chunk boundary after its scheduled instant — the
+        tokens the engine emitted up to detection were already streamed,
+        which is exactly why recovery is teacher-forced replay). Returns
+        the recovered admissions, to be requeued at the FRONT of the
+        waiting queue (they predate everything still queued)."""
+        if self.faults is None:
+            return []
+        sched = self.scheduler
+        for e in range(self.pool.n):
+            sched.set_engine_slowdown(
+                e, self.faults.slowdown(e, sched.engine_clock(e)))
+        clocks = [sched.engine_clock(e) for e in range(self.pool.n)]
+        recovered: List[_PendingAdmission] = []
+        for e in self.faults.due_crashes(clocks):
+            if not self.pool.live_mask[e]:
+                continue               # already parked/dead: crash is moot
+            recovered.extend(self._fail_engine(e))
+        return recovered
+
+    def _fail_engine(self, engine: int) -> List["_PendingAdmission"]:
+        """Kill ``engine`` and recover its in-flight requests by replay
+        re-prefill. Slot accounting is conserved through the failure
+        (``fail_engine`` releases every slot), the scheduler's live mask
+        and timeline record the capacity loss, and each lost request comes
+        back as a recovered pending admission."""
+        sched = self.scheduler
+        fail_t = sched.engine_clock(engine)
+        lost = self.pool.fail_engine(engine)
+        sched.set_engine_live(engine, False)
+        sched.on_engine_failure(engine)
+        return [self._replay_recover(rid, payload, fail_t)
+                for rid, payload, _cache_len in lost]
+
+    def _replay_recover(self, rid: int, slot_payload: "_Slot",
+                        fail_t: float) -> "_PendingAdmission":
+        """Rebuild a crashed request's KV: re-prefill its prompt plus a
+        teacher-forced replay of every already-emitted token but the last
+        (EMS-cached prefix blocks are reused, so mostly only the emitted
+        suffix is recomputed), and verify greedy determinism — the replay
+        prefill's next-token argmax must reproduce the last emitted token.
+        The recovered output is therefore token-identical to the
+        fault-free run by construction, not by luck."""
+        sched = self.scheduler
+        req: Request = self._inflight[rid]
+        trace = sched.traces[rid]
+        result = slot_payload.result
+        remaining = slot_payload.remaining
+        emitted = list(result.tokens)
+        if not emitted or remaining <= 0:
+            raise SlotError(
+                f"rid={rid} crashed with no emitted token or no budget "
+                f"({len(emitted)} emitted, {remaining} remaining) — a live "
+                "slot always holds >= 1 token and wants >= 1 more")
+        replay = list(req.prompt) + emitted[:-1]
+        first, caches, rres = self.prefills[0].run(
+            Request(rid, replay, 1, arrival=fail_t))
+        if first != emitted[-1]:
+            raise RuntimeError(
+                f"replay re-prefill diverged for rid={rid}: argmax after "
+                f"teacher-forcing {len(replay)} tokens gave {first}, the "
+                f"crashed engine had emitted {emitted[-1]} — greedy decode "
+                "must be deterministic for recovery to be token-exact")
+        _, prefill_done = sched.charge_recovery_prefill(
+            rres.computed_tokens, fail_t)
+        # Re-handoff over the RDMA plane. Fault-plan events may still claim
+        # these attempts; an exhausted handoff costs more virtual time and
+        # is simply re-sent (the plan is finite, so this terminates).
+        tdt = 0.0
+        while True:
+            try:
+                tdt += self.transfer.transfer(caches)
+                break
+            except TransferError as exc:
+                tdt += exc.seconds
+        ready = prefill_done + tdt
+        sched.on_recovery(trace, fail_t,
+                          tokens_replayed=len(emitted) - 1, ready_at=ready)
+        del result.tokens[-1:]   # pool.add re-appends the verified token
+        keys = tuple(self.cc.block_keys(replay)) \
+            if self.cc is not None and self.pool.router.uses_affinity else ()
+        return _PendingAdmission(first, caches, len(replay), result,
+                                 remaining + 1, keys,
+                                 ready_at=ready, recovered=True)
+
     def _make_autoscaler(self) -> Optional[PoolAutoscaler]:
         """One PoolAutoscaler per serve() wave, built from the scheduler's
         *current* config and cost model (MTP feedback may have recalibrated
@@ -802,19 +909,27 @@ class ServingSystem:
             cooldown=cfg.autoscale_cooldown)
 
     def _autoscale_tick(self, scaler: Optional[PoolAutoscaler],
-                        queue_depth: int) -> None:
+                        queue_depth: int) -> List["_PendingAdmission"]:
         """One controller evaluation between decode turns: apply a grow
         (spawn or revive an engine, register/warm its scheduler views) or a
         shrink (atomic migration-backed retirement, every move stamped on
-        the trace), and record the scale event on the virtual timeline."""
+        the trace), and record the scale event on the virtual timeline.
+        The live roster may be empty after engine failures — the grow path
+        (respawn toward ``min_engines``) must still run then. Returns any
+        recovered admissions a drain-failure fallback produced (normally
+        empty)."""
         if scaler is None:
-            return
+            return []
         sched, pool = self.scheduler, self.pool
-        # Shrink victim: fewest active slots; ties retire the
-        # latest-spawned engine so engine 0 stays the stable anchor.
+        # Shrink victim: fewest active slots among the LIVE roster; ties
+        # retire the latest-spawned engine so engine 0 stays the stable
+        # anchor. Post-failure the roster can be empty: no victim, and the
+        # controller sees n_live=0 (dead engines are not capacity).
         victim = min(pool.live_ids,
-                     key=lambda i: (pool.engines[i].active, -i))
-        shrinkable = pool.n_live > 1 and pool.can_drain(victim)
+                     key=lambda i: (pool.engines[i].active, -i)) \
+            if pool.live_ids else None
+        shrinkable = victim is not None and pool.n_live > 1 \
+            and pool.can_drain(victim)
         decision = scaler.decide(pool.n_live, pool.active, queue_depth,
                                  shrinkable=shrinkable)
         if decision == "grow":
@@ -825,11 +940,23 @@ class ServingSystem:
                 sched.register_engine(pool.engines[engine].slot_mgr)
             sched.record_scale_event("grow", engine)
         elif decision == "shrink":
-            moved = pool.retire_engine(victim, self.transfer)
+            try:
+                moved = pool.retire_engine(victim, self.transfer)
+            except DrainError as exc:
+                # The RDMA plane exhausted its retries mid-drain. The
+                # completed moves stand; the stuck request's KV is intact
+                # on the victim but must never be propagated unverified —
+                # fall back to failing the victim over to replay
+                # re-prefill, which completes the shrink with recovered
+                # (token-identical) requests instead of garbage KV.
+                for rid, dst, seconds in exc.moved:
+                    sched.on_migrate(sched.traces[rid], victim, dst, seconds)
+                return self._fail_engine(victim)
             for rid, dst, seconds in moved:
                 sched.on_migrate(sched.traces[rid], victim, dst, seconds)
             sched.set_engine_live(victim, False)
             sched.record_scale_event("shrink", victim)
+        return []
 
     def serve(self, requests: List[Request],
               open_loop: bool = False) -> List[RequestResult]:
@@ -847,6 +974,34 @@ class ServingSystem:
         results: List[RequestResult] = []
         waiting: List[_PendingAdmission] = []
         eps = 1e-12
+        self._inflight.clear()
+        # Per-epoch RDMA retry accounting (engine counters are lifetime).
+        xfer0 = (self.transfer.retries, self.transfer.timeouts,
+                 self.transfer.corruptions)
+
+        def sync_transfer_counters() -> None:
+            sched.transfer_retries = self.transfer.retries - xfer0[0]
+            sched.transfer_timeouts = self.transfer.timeouts - xfer0[1]
+            sched.transfer_corruptions = self.transfer.corruptions - xfer0[2]
+
+        def item_ready(item: _PendingAdmission) -> float:
+            """When this admission's KV is available: the recovery instant
+            for recovered requests, the original handoff otherwise."""
+            if item.ready_at is not None:
+                return item.ready_at
+            return sched.traces[item.result.rid].ready_at
+
+        def shed_item(item: _PendingAdmission) -> None:
+            """Unified shed semantics: like the up-front capacity reject,
+            a gate shed returns no tokens — the prefill output is dropped,
+            not delivered — and contributes nothing to throughput."""
+            trace = sched.traces[item.result.rid]
+            item.result.shed = True
+            item.result.tokens.clear()
+            sched.on_shed(trace)
+            sched.on_finish(trace, 0)
+            results.append(item.result)
+            self._inflight.pop(item.result.rid, None)
 
         def admit_waiting(mid_turn: bool = False) -> None:
             """Admit gate-ready requests in FIFO order; the gate may queue
@@ -855,13 +1010,33 @@ class ServingSystem:
             (``mid_turn``), so a freed slot takes the next admission before
             the next engine steps instead of waiting out the whole turn."""
             nonlocal waiting
+            if not self.pool.live_ids:
+                # Total capacity loss. With an autoscaler the respawn path
+                # will restore the floor — hold the queue. Without one no
+                # engine is ever coming back: shed everything rather than
+                # deadlock (graceful degradation's last resort).
+                if scaler is None:
+                    for item in waiting:
+                        shed_item(item)
+                    waiting = []
+                return
+            degrade = sched.config.degrade_shed_queue_s
             still_waiting: List[_PendingAdmission] = []
             for idx, item in enumerate(waiting):
                 trace = sched.traces[item.result.rid]
-                if open_loop and trace.ready_at > sched.decode_now + eps:
+                ready = item_ready(item)
+                if open_loop and ready > sched.decode_now + eps:
                     # KV not yet ready on the open-loop clock: hold (FIFO)
                     still_waiting.extend(waiting[idx:])
                     break
+                if (degrade is not None and not item.recovered
+                        and sched.decode_now - ready > degrade + eps):
+                    # Graceful degradation: post-failure capacity pressure
+                    # has held this request past the shed threshold — cut
+                    # it loose even in queue mode instead of growing an
+                    # unbounded backlog on a shrunken pool.
+                    shed_item(item)
+                    continue
                 engine = self.pool.select_engine(item.block_keys)
                 decision = sched.admission_decision(trace, engine)
                 if decision == "admit":
@@ -876,18 +1051,14 @@ class ServingSystem:
                     self.pool.add(engine, slot, item.caches, item.first,
                                   item.prompt_len, item.result, item.max_new,
                                   item.block_keys)
-                    sched.on_admit(trace, slot, engine)
+                    if item.recovered:
+                        sched.on_readmit(trace, engine, ready)
+                    else:
+                        sched.on_admit(trace, slot, engine)
                     if mid_turn:
                         sched.note_mid_scan_refill()
                 elif decision == "shed":
-                    # Unified shed semantics: like the up-front capacity
-                    # reject, a gate shed returns no tokens — the prefill
-                    # output is dropped, not delivered — and contributes
-                    # nothing to throughput accounting.
-                    item.result.shed = True
-                    sched.on_shed(trace)
-                    sched.on_finish(trace, 0)
-                    results.append(item.result)
+                    shed_item(item)
                 else:  # wait: keep FIFO order, stop admitting this round
                     still_waiting.extend(waiting[idx:])
                     break
@@ -905,7 +1076,7 @@ class ServingSystem:
             horizon = (sched.config.decode_chunk
                        * sched.cost.step_time(self.pool.engines[engine].active))
             t = sched.engine_clock(engine) + horizon + eps
-            if any(sched.traces[w.result.rid].ready_at <= t for w in waiting):
+            if any(item_ready(w) <= t for w in waiting):
                 return True
             return bool(pending) and pending[0].arrival <= t
         # Worst-case decode cache growth: max_new - 1 iterations, +1 slack
@@ -915,6 +1086,13 @@ class ServingSystem:
         rebalance_every = sched.config.decode_rebalance_every
         decode_turns = 0
         while pending or waiting or self.pool.active:
+            # Fault injection first: straggler factors re-asserted from the
+            # engine clocks, due crashes fired. Recovered requests requeue
+            # at the FRONT of the admission queue — they were admitted
+            # before anything still waiting.
+            recovered = self._apply_faults()
+            if recovered:
+                waiting[0:0] = recovered
             # prefill (async wrt decode; modeled sequentially on 1 CPU)
             while pending and (not open_loop or
                                pending[0].arrival <= sched.decode_now + eps):
@@ -951,6 +1129,7 @@ class ServingSystem:
                 sched.on_transfer(trace, res.transfer_seconds)
                 keys = tuple(self.cc.block_keys(req.prompt)) if affinity \
                     else ()
+                self._inflight[req.rid] = req
                 waiting.append(_PendingAdmission(first, caches,
                                                  len(req.prompt), res,
                                                  req.max_new_tokens, keys))
@@ -980,12 +1159,20 @@ class ServingSystem:
                         sched.on_decode_step(*entry, engine=engine)
                     for r in finished:
                         sched.on_finish(sched.traces[r.rid], len(r.tokens))
+                        self._inflight.pop(r.rid, None)
                     results.extend(finished)
                     if continuous and waiting:
                         admit_waiting(mid_turn=True)
                 sched.sync_idle_clocks(stepped)
                 if rebalance_every and decode_turns % rebalance_every == 0:
-                    moved = self.pool.rebalance(self.transfer)
+                    try:
+                        moved = self.pool.rebalance(self.transfer)
+                    except TransferError:
+                        # Exhausted retries on an *optional* move: the
+                        # victim is intact on its source engine (migrate
+                        # releases the source only after delivery), so
+                        # skip this rebalance rather than escalate.
+                        moved = None
                     if moved is not None:
                         rid, src_e, dst_e, seconds = moved
                         sched.on_migrate(sched.traces[rid], src_e, dst_e,
@@ -999,12 +1186,19 @@ class ServingSystem:
                 if scaler is not None:
                     if open_loop:
                         now = sched.decode_now + eps
-                        queued = sum(
-                            1 for item in waiting
-                            if sched.traces[item.result.rid].ready_at <= now)
+                        queued = sum(1 for item in waiting
+                                     if item_ready(item) <= now)
                     else:
                         queued = len(waiting)
-                    self._autoscale_tick(scaler, queued)
+                    recovered = self._autoscale_tick(scaler, queued)
+                    if recovered:
+                        waiting[0:0] = recovered
+            elif scaler is not None and waiting and not self.pool.live_ids:
+                # Every engine is dead and nothing can step: run the
+                # controller anyway so the respawn-toward-min_engines path
+                # restores capacity (the tick above only runs between
+                # decode turns, which need a live engine to exist).
+                self._autoscale_tick(scaler, len(waiting))
             elif open_loop and (pending or waiting):
                 # Decode pool idle with future work: fast-forward the
                 # virtual clock to the next event that can actually
@@ -1016,11 +1210,11 @@ class ServingSystem:
                 # still gated and the loop spinning on the same instant.
                 events = []
                 if waiting:
-                    events.append(
-                        sched.traces[waiting[0].result.rid].ready_at)
+                    events.append(item_ready(waiting[0]))
                 if pending:
                     events.append(pending[0].arrival)
                 sched.advance_clock(min(events))
+        sync_transfer_counters()
         if self.decode.use_mtp:
             # Acceptance-rate feedback: fold the wave's measured draft
             # acceptance into the cost model so the next wave's admission

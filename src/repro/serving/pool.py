@@ -38,9 +38,25 @@ for a new one — so scale oscillation never re-compiles.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.scheduler import DecodeCostModel, SlotError
+from repro.serving.transfer import TransferError
+
+
+class DrainError(SlotError):
+    """An engine drain moved some requests and then hit an exhausted
+    RDMA-plane transfer. ``moved`` holds the migrations that completed
+    (those requests live on their destinations); ``failed_rid`` is the
+    request whose payload never left the source engine — its slot is
+    intact there, so the caller can fall back to replay re-prefill
+    instead of propagating possibly-garbage KV."""
+
+    def __init__(self, msg: str, moved: List[Tuple[int, int, float]],
+                 failed_rid: int):
+        super().__init__(msg)
+        self.moved = moved
+        self.failed_rid = failed_rid
 
 
 # ---------------------------------------------------------------------------
@@ -93,7 +109,16 @@ class DecodePoolRouter:
         """Notification that a routed request was actually placed."""
 
     def on_retire(self, engine: int) -> None:  # pragma: no cover - hook
-        """Notification that ``engine`` was drained and parked."""
+        """Notification that ``engine`` left the live set (drained and
+        parked, or failed): any placement state pointing at it is stale."""
+
+    def on_migrate(self, engine: int,
+                   block_keys: Sequence[str] = ()) -> None:  # pragma: no cover
+        """Notification that an in-flight request's KV landed on
+        ``engine`` via cross-engine migration. Distinct from ``on_admit``
+        on purpose: a migration is not an admission (the round-robin
+        cursor must not advance for one), but affinity state must follow
+        the bytes."""
 
     def residency(self, engine: int, block_keys: Sequence[str]) -> int:
         """How many of ``block_keys`` this router believes are resident on
@@ -178,10 +203,15 @@ class CacheAffinityRouter(DecodePoolRouter):
             self._resident[k] = engine
 
     def on_retire(self, engine: int) -> None:
-        # A parked engine's cache rows are dead: routing future requests
-        # toward it by stale residency would fight the live mask.
+        # A parked or failed engine's cache rows are dead: routing future
+        # requests toward it by stale residency would fight the live mask.
         self._resident = {k: e for k, e in self._resident.items()
                           if e != engine}
+
+    def on_migrate(self, engine: int,
+                   block_keys: Sequence[str] = ()) -> None:
+        for k in block_keys:
+            self._resident[k] = engine
 
     def residency(self, engine: int, block_keys: Sequence[str]) -> int:
         return sum(1 for k in block_keys
@@ -235,9 +265,14 @@ class DecodePool:
         self.router = router
         self.engine_factory = engine_factory
         self._live = [True] * len(engines)
+        # Dead ≠ parked: a parked engine drained its slots and keeps warm
+        # device state (revival is free); a dead engine crashed, its KV is
+        # lost, and revival means a process restart over the same id.
+        self._dead = [False] * len(engines)
         self._request_keys: Dict[int, Tuple[str, ...]] = {}
         self.migrations = 0
         self.migrated_bytes = 0
+        self.failures = 0
 
     @staticmethod
     def _assert_homogeneous(engines: Sequence) -> None:
@@ -264,8 +299,22 @@ class DecodePool:
         return list(self._live)
 
     @property
+    def n_dead(self) -> int:
+        return sum(self._dead)
+
+    @property
+    def dead_ids(self) -> List[int]:
+        return [i for i, dead in enumerate(self._dead) if dead]
+
+    @property
     def active(self) -> int:
-        return sum(e.active for e in self.engines)
+        """Active slots across *live* engines — serveable demand. Parked
+        and failed engines hold no work by construction (drain moves it,
+        ``fail_engine`` releases it), so excluding them is belt-and-braces
+        for the autoscaler's demand math: a non-live engine must never
+        count as capacity or as load."""
+        return sum(e.active for e, live in zip(self.engines, self._live)
+                   if live)
 
     @property
     def capacity(self) -> int:
@@ -334,15 +383,45 @@ class DecodePool:
                 out.append((e, finished, iter_log))
         return out
 
-    # -- engine lifecycle (autoscaling) ------------------------------------
+    # -- engine lifecycle (autoscaling + failure) --------------------------
+    def fail_engine(self, engine: int) -> List[Tuple[int, Any, int]]:
+        """Crash ``engine``: mark it dead (distinct from parked — its
+        device-side KV is lost; revival is a process restart, not a warm
+        unpark), release every active slot with conserved accounting
+        (``acquired == released + active`` holds across the failure), and
+        clear the router's residency for it so post-failure routing never
+        scores a dead engine. Returns the in-flight ``(rid, payload,
+        cache_len)`` records so the serving layer can recover each request
+        by replay re-prefill."""
+        if self._dead[engine]:
+            raise ValueError(f"engine {engine} is already dead")
+        eng = self.engines[engine]
+        lost: List[Tuple[int, Any, int]] = []
+        for slot, info in list(eng.slot_mgr.active_slots()):
+            eng.slot_mgr.release(slot)
+            self._request_keys.pop(info.rid, None)
+            lost.append((info.rid, info.payload, info.cache_len))
+        self._live[engine] = False
+        self._dead[engine] = True
+        self.failures += 1
+        self.router.on_retire(engine)
+        return lost
+
     def spawn_engine(self) -> Tuple[int, bool]:
         """Grow the pool by one live engine. Returns ``(engine, revived)``:
         the lowest parked engine is revived when one exists (its jitted
-        programs are already warm; its drained slots are empty), otherwise
-        ``engine_factory`` builds a fresh engine whose id extends the pool
-        (never reindexing peers)."""
+        programs are already warm; its drained slots are empty), then the
+        lowest dead engine is restarted over its stable id (its slots were
+        released at failure, so the stale device state is unreachable),
+        otherwise ``engine_factory`` builds a fresh engine whose id extends
+        the pool (never reindexing peers)."""
         for e, live in enumerate(self._live):
-            if not live:
+            if not live and not self._dead[e]:
+                self._live[e] = True
+                return e, True
+        for e, dead in enumerate(self._dead):
+            if dead:
+                self._dead[e] = False
                 self._live[e] = True
                 return e, True
         if self.engine_factory is None:
@@ -352,6 +431,7 @@ class DecodePool:
         self._assert_homogeneous([self.engines[0], eng])
         self.engines.append(eng)
         self._live.append(True)
+        self._dead.append(False)
         self.router.resize(self.n)
         return self.n - 1, False
 
@@ -399,10 +479,15 @@ class DecodePool:
             raise SlotError(
                 f"engine {dst_engine} has no free slot for migration")
         flat, cache_len, cur_tok, draft_tok = src.export_slot(src_slot)
+        # The RDMA charge (and its retry loop) runs BEFORE the source slot
+        # is released: an exhausted transfer raises here and the request
+        # stays intact on the source engine — a failed migration never
+        # half-moves a request or propagates an unverified payload.
         seconds = 0.0 if transfer is None else transfer.migrate(flat)
         info = src.slot_mgr.release(src_slot)
         dst.import_slot(dst_slot, flat, cache_len, cur_tok, draft_tok,
                         info.rid, info.payload)
+        self.router.on_migrate(dst_engine, self._request_keys.get(rid, ()))
         self.migrations += 1
         self.migrated_bytes += int(flat.nbytes)
         return src_e, dst_slot, seconds
@@ -464,13 +549,24 @@ class DecodePool:
             peers = [i for i in self.live_ids if i != engine
                      and self.engines[i].slot_mgr.free_slot() is not None]
             dst = min(peers, key=lambda i: (self.engines[i].active, i))
-            _, _, seconds = self.migrate(info.rid, dst, transfer)
+            try:
+                _, _, seconds = self.migrate(info.rid, dst, transfer)
+            except TransferError as exc:
+                # The capacity pre-check held but the RDMA plane gave out
+                # mid-drain. Completed moves stand; the failed request is
+                # still whole on the source — surface both so the caller
+                # can recover it by replay instead of unwinding the drain.
+                raise DrainError(
+                    f"drain of engine {engine} failed migrating "
+                    f"rid={info.rid} after {len(moved)} completed moves: "
+                    f"{exc}", moved, info.rid) from exc
             moved.append((info.rid, dst, seconds))
         return moved
 
     # -- reporting ---------------------------------------------------------
     def engine_stats(self) -> List[Dict[str, int]]:
-        return [{"engine": e, "live": self._live[e], "active": eng.active,
+        return [{"engine": e, "live": self._live[e], "dead": self._dead[e],
+                 "active": eng.active,
                  "iters": eng.iters,
                  "live_slot_iters": eng.live_slot_iters,
                  "dead_slot_iters": eng.dead_slot_iters,
@@ -549,7 +645,18 @@ class PoolAutoscaler:
         victim (``DecodePool.can_drain``): a shrink the peers cannot absorb
         is reported as hold (the shrink streak resets; no cooldown is
         spent on it).
+
+        ``n_live`` must be the pool's *live* roster for this turn —
+        failed/parked engines excluded — not the constructed engine count:
+        a dead engine counts as neither capacity nor demand. When capacity
+        loss drops the roster below ``min_engines`` the controller respawns
+        immediately, bypassing patience and cooldown: hysteresis exists to
+        damp demand noise, not to slow down failure recovery.
         """
+        if n_live < self.min_engines:
+            self._grow_streak = self._shrink_streak = 0
+            self._cooldown_left = 0
+            return "grow"
         if self._cooldown_left > 0:
             self._cooldown_left -= 1
             self._grow_streak = self._shrink_streak = 0

@@ -77,6 +77,9 @@ class RequestTrace:
     decode_engine: int = -1  # pool engine currently decoding the request
     migrations: int = 0      # cross-engine KV migrations mid-decode
     migration_seconds: float = 0.0
+    recoveries: int = 0      # engine-failure recoveries (replay re-prefill)
+    tokens_replayed: int = 0  # already-emitted tokens teacher-forced back
+    recovery_seconds: float = 0.0  # failure detection -> KV re-ready
     tokens_out: int = 0
     shed: bool = False
 
@@ -586,6 +589,12 @@ class SchedulerConfig:
     autoscale_grow_patience: int = 1
     autoscale_shrink_patience: int = 3
     autoscale_cooldown: int = 2
+    # Graceful degradation under capacity loss: when set, a queued (not
+    # yet admitted) request whose wait since KV-ready exceeds this many
+    # virtual seconds is shed even in queue mode — after an engine failure
+    # the shrunken pool sheds its backlog instead of growing an unbounded
+    # queue. None keeps queue mode unconditional (the pre-fault behavior).
+    degrade_shed_queue_s: Optional[float] = None
 
 
 class Scheduler:
@@ -662,6 +671,20 @@ class Scheduler:
         self.scale_events: List[Dict[str, Any]] = []
         self.engine_count_timeline: List[Tuple[float, int]] = [
             (0.0, sum(self._live))]
+        # Fault-tolerance bookkeeping (per-epoch like everything above).
+        # _slowdown persists per-engine straggler factors only within the
+        # epoch; the injector re-asserts them every turn anyway.
+        self._slowdown = [1.0] * self.n_decode
+        self.engine_failures = 0
+        self.recoveries = 0
+        self.tokens_replayed = 0
+        self.recovery_ttfts: List[float] = []
+        # RDMA-plane retry counters, synced from the KVTransferEngine by
+        # the ServingSystem (the transfer engine's counters are lifetime,
+        # the summary's are per-epoch deltas).
+        self.transfer_retries = 0
+        self.transfer_timeouts = 0
+        self.transfer_corruptions = 0
 
     @property
     def decode_now(self) -> float:
@@ -770,7 +793,11 @@ class Scheduler:
         nothing but the dead-slot counters.
         """
         if active_rids:
-            dt = self.cost.step_time(len(active_rids))
+            # Straggler factor 1.0 is the healthy default; multiplying by
+            # it is exact in IEEE float, so fault-free timelines are
+            # bit-identical to the pre-fault scheduler.
+            dt = self.cost.step_time(len(active_rids)) \
+                * self._slowdown[engine]
             self._decode_now[engine] += dt
             self.decode_busy += dt
             self.decode_steps += 1
@@ -863,6 +890,7 @@ class Scheduler:
         self._eng_steps.append(0)
         self._eng_tokens.append(0)
         self._eng_masked.append(0)
+        self._slowdown.append(1.0)
         return e
 
     def set_engine_live(self, engine: int, live: bool) -> None:
@@ -875,6 +903,61 @@ class Scheduler:
             self._decode_now[engine] = max(self._decode_now[engine], frontier)
         else:
             self._live[engine] = live
+
+    # -- fault tolerance ---------------------------------------------------
+    def set_engine_slowdown(self, engine: int, factor: float) -> None:
+        """Apply a straggler factor to ``engine``'s step-time charging
+        (1.0 = healthy). Asserted by the fault injector every turn, so a
+        window expiring between turns heals the engine at the next one."""
+        if factor < 1.0:
+            raise ValueError("slowdown factor must be >= 1.0")
+        self._slowdown[engine] = factor
+
+    def on_engine_failure(self, engine: int) -> None:
+        """An engine died. The caller has already parked its views
+        (``set_engine_live(engine, False)``); here the failure is counted
+        and stamped on the engine-count timeline as a ``fail`` event so
+        capacity loss is visible next to grow/shrink decisions."""
+        self.engine_failures += 1
+        self.record_scale_event("fail", engine)
+
+    def charge_recovery_prefill(self, computed_tokens: int,
+                                at: float) -> Tuple[int, float]:
+        """Charge a replay re-prefill to the least-backlogged prefill
+        instance, starting no earlier than ``at`` (the failure-detection
+        instant). Returns ``(instance, completion_time)``; concurrent
+        recoveries serialize per instance exactly like arrivals do."""
+        i = min(range(self.n_prefill),
+                key=lambda j: (self._instance_free_at[j], j))
+        start = max(at, self._instance_free_at[i])
+        end = start + computed_tokens * self.config.prefill_token_cost_s
+        self._instance_free_at[i] = end
+        return i, end
+
+    def on_recovery(self, trace: RequestTrace, fail_t: float,
+                    tokens_replayed: int, ready_at: float) -> None:
+        """A failed engine's in-flight request was rebuilt by replay
+        re-prefill and is ready for re-admission at ``ready_at``. The
+        latency is charged to the trace (``recovery_seconds``) without
+        touching the original prefill/TTFT fields — TTFT already happened;
+        recovery is a separate, separately-reported hit."""
+        dt = ready_at - fail_t
+        trace.recoveries += 1
+        trace.tokens_replayed += tokens_replayed
+        trace.recovery_seconds += dt
+        self.recoveries += 1
+        self.tokens_replayed += tokens_replayed
+        self.recovery_ttfts.append(dt)
+
+    def on_readmit(self, trace: RequestTrace, engine: int,
+                   ready_at: float) -> None:
+        """Re-admission of a recovered request. Unlike :meth:`on_admit`
+        this must NOT restamp ``decode_admit`` (the original admission is
+        what TTFT/queue statistics mean); it only moves the request to its
+        new engine and keeps that engine's clock monotone past the
+        recovered KV's ready time."""
+        trace.decode_engine = engine
+        self._decode_now[engine] = max(self._decode_now[engine], ready_at)
 
     def record_scale_event(self, action: str, engine: int) -> None:
         """Stamp a grow/shrink decision on the virtual timeline (called
@@ -951,6 +1034,17 @@ class Scheduler:
             s["engine_busy_s"] = [round(b, 9) for b in self._eng_busy]
             s["engine_util"] = [round(b / makespan, 4)
                                 for b in self._eng_busy]
+        # Fault-tolerance metrics are unconditional: their zeros are the
+        # assertion that a run was fault-free, not an absence of data.
+        s["engine_failures"] = self.engine_failures
+        s["recoveries"] = self.recoveries
+        s["tokens_replayed"] = self.tokens_replayed
+        s["retries"] = self.transfer_retries
+        s["transfer_timeouts"] = self.transfer_timeouts
+        s["transfer_corruptions"] = self.transfer_corruptions
+        if self.recovery_ttfts:
+            s["recovery_ttft_p50_s"] = SLOTracker._pct(self.recovery_ttfts, 50)
+            s["recovery_ttft_p99_s"] = SLOTracker._pct(self.recovery_ttfts, 99)
         if self.config.autoscale or self.scale_events:
             # An autoscale wave with zero events is a legitimate all-hold
             # run — still report the (flat) timeline rather than looking

@@ -10,18 +10,49 @@ Three mechanisms, reproduced:
 * **Asynchronous scheduling** — the ServingSystem dispatches prefill and the
   transfer from a background logical thread; decode never blocks (modeled by
   charging transfer time to the request's TTFT, not to decode steps).
+
+Fault tolerance (ISSUE 7): every ``transfer``/``migrate`` carries a payload
+fingerprint and, when a fault hook is installed, runs a timeout + capped
+exponential-backoff retry loop on the virtual clock. An exhausted op raises
+:class:`TransferTimeout` / :class:`TransferCorruption` (both
+:class:`TransferError`) carrying the seconds already burned, so callers can
+charge the trace and fall back to replay re-prefill instead of propagating
+garbage KV. Without a fault hook the data path is bit- and cost-identical
+to the fault-free engine.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from repro.mempool.pool import PlaneModel, SimClock
+from repro.serving.cache_ops import fingerprint
 
 RDMA_PLANE = PlaneModel("rdma", 50e9, 5e-6)   # 400 Gbps unidirectional / NPU
+
+
+class TransferError(RuntimeError):
+    """An RDMA-plane op failed after exhausting its retries. ``seconds``
+    is the virtual time already charged to the clock (timeout windows,
+    backoff sleeps, wasted wire time), ``attempts`` the attempts made."""
+
+    def __init__(self, msg: str, *, seconds: float = 0.0, nbytes: int = 0,
+                 attempts: int = 0):
+        super().__init__(msg)
+        self.seconds = seconds
+        self.nbytes = nbytes
+        self.attempts = attempts
+
+
+class TransferTimeout(TransferError):
+    """Every attempt stalled past the timeout window."""
+
+
+class TransferCorruption(TransferError):
+    """Every attempt delivered a payload whose fingerprint mismatched."""
 
 
 def prefill_source_rank(prefill_tp: int, decode_tp: int, decode_dp: int,
@@ -55,20 +86,95 @@ def cache_nbytes(cache: Any) -> int:
 
 
 class KVTransferEngine:
-    """Charges each prefill→decode handoff to the RDMA plane."""
+    """Charges each prefill→decode handoff to the RDMA plane.
+
+    ``fault_hook(op) -> None | "timeout" | "corrupt"`` (typically
+    :meth:`~repro.serving.faults.FaultInjector.transfer_fault`) is consulted
+    once per delivery *attempt*; a faulted attempt charges its cost
+    (timeout window, or full wire time for a corrupted delivery), then the
+    op backs off ``backoff_base_s · 2^k`` capped at ``backoff_cap_s`` and
+    retries, up to ``max_retries`` retries before raising. With no hook
+    the fast path is exactly the fault-free engine — one charge, no
+    fingerprint work — so fault-free runs stay bit- and cost-identical.
+    """
 
     def __init__(self, clock: SimClock | None = None,
-                 plane: PlaneModel = RDMA_PLANE):
+                 plane: PlaneModel = RDMA_PLANE, *,
+                 timeout_s: float = 2e-3, max_retries: int = 3,
+                 backoff_base_s: float = 2.5e-4, backoff_cap_s: float = 2e-3,
+                 fault_hook: Optional[Callable[[str], Optional[str]]] = None):
+        if timeout_s <= 0 or max_retries < 0:
+            raise ValueError("need timeout_s > 0 and max_retries >= 0")
+        if backoff_base_s <= 0 or backoff_cap_s < backoff_base_s:
+            raise ValueError("need 0 < backoff_base_s <= backoff_cap_s")
         self.clock = clock or SimClock()
         self.plane = plane
+        self.timeout_s = timeout_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.fault_hook = fault_hook
         self.transfers = 0
         self.bytes_moved = 0
         self.migrations = 0
         self.bytes_migrated = 0
+        self.retries = 0
+        self.timeouts = 0
+        self.corruptions = 0
+        self.fingerprint_checks = 0
+
+    def _idle(self, seconds: float) -> float:
+        """Charge non-wire virtual time (timeout windows, backoff sleeps)
+        to the clock."""
+        self.clock.elapsed += seconds
+        return seconds
+
+    def _deliver(self, payload: Any, op: str) -> Tuple[float, int]:
+        """One op through the retry loop. Returns (seconds, nbytes) on a
+        fingerprint-verified delivery; raises :class:`TransferError` after
+        ``max_retries`` failed retries with the burned seconds attached."""
+        nbytes = cache_nbytes(payload)
+        if self.fault_hook is None:
+            return self.clock.charge(self.plane, nbytes), nbytes
+        sent_fp = fingerprint(payload)
+        dt, failures = 0.0, 0
+        while True:
+            fault = self.fault_hook(op)
+            if fault == "timeout":
+                # The plane stalls for the full window before the sender
+                # gives up on this attempt; no bytes land.
+                dt += self._idle(self.timeout_s)
+                self.timeouts += 1
+                err, what = TransferTimeout, "timed out"
+            elif fault == "corrupt":
+                # Full wire cost paid, but the delivered fingerprint
+                # mismatches — the delivery is discarded, never applied.
+                dt += self.clock.charge(self.plane, nbytes)
+                self.fingerprint_checks += 1
+                self.corruptions += 1
+                err, what = TransferCorruption, "arrived corrupted"
+            else:
+                dt += self.clock.charge(self.plane, nbytes)
+                self.fingerprint_checks += 1
+                if fingerprint(payload) != sent_fp:
+                    # Genuine (non-injected) corruption of the in-memory
+                    # payload between send and delivery.
+                    raise TransferCorruption(
+                        f"{op} payload of {nbytes} B mutated in flight",
+                        seconds=dt, nbytes=nbytes, attempts=failures + 1)
+                return dt, nbytes
+            failures += 1
+            if failures > self.max_retries:
+                raise err(
+                    f"{op} of {nbytes} B {what} on all {failures} attempts "
+                    f"({self.max_retries} retries exhausted)",
+                    seconds=dt, nbytes=nbytes, attempts=failures)
+            self.retries += 1
+            dt += self._idle(min(self.backoff_base_s * (1 << (failures - 1)),
+                                 self.backoff_cap_s))
 
     def transfer(self, cache: Any) -> float:
-        nbytes = cache_nbytes(cache)
-        dt = self.clock.charge(self.plane, nbytes)
+        dt, nbytes = self._deliver(cache, "transfer")
         self.transfers += 1
         self.bytes_moved += nbytes
         return dt
@@ -78,8 +184,7 @@ class KVTransferEngine:
         as the prefill→decode handoff (it must never contend with decode
         compute traffic), accounted separately so pool rebalancing cost is
         visible in benchmarks."""
-        nbytes = cache_nbytes(payload)
-        dt = self.clock.charge(self.plane, nbytes)
+        dt, nbytes = self._deliver(payload, "migrate")
         self.migrations += 1
         self.bytes_migrated += nbytes
         return dt

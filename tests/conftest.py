@@ -14,6 +14,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs import get_config, smoke_variant  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "fault_soak: deterministic fault-injection soak over the pool/"
+        "injector state machines (fast by default; FAULT_SOAK_ITERS=1000000 "
+        "runs the full million-iteration virtual-clock soak)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)

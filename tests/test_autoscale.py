@@ -109,6 +109,27 @@ def test_autoscaler_min_max_clamps():
     assert s.decide(3, 0, 0) == "shrink"
 
 
+def test_autoscaler_respawns_below_min_bypassing_hysteresis():
+    """Regression (dead-engine demand math): ``n_live`` is the live roster,
+    so an engine failure can legitimately present n_live < min_engines —
+    and the controller must respawn IMMEDIATELY, through patience and even
+    mid-cooldown (hysteresis damps demand noise, not failure recovery)."""
+    s = make_scaler(min_engines=2, max_engines=4, grow_patience=3,
+                    cooldown=4)
+    # zero demand, roster below the floor: grow anyway, no patience
+    assert s.decide(1, 0, 0) == "grow"
+    # spend a cooldown via a normal grow, then fail below min mid-cooldown
+    s = make_scaler(min_engines=2, max_engines=4, grow_patience=1,
+                    cooldown=4)
+    assert s.decide(2, 99, 0) == "grow"
+    assert s.decide(3, 99, 0) == "hold"          # cooling down
+    assert s.decide(1, 0, 0) == "grow"           # failure overrides cooldown
+    # total capacity loss (n_live=0) is the extreme of the same path
+    s = make_scaler(min_engines=1, max_engines=2, grow_patience=5,
+                    cooldown=5)
+    assert s.decide(0, 0, 3) == "grow"
+
+
 def test_autoscaler_never_grows_and_shrinks_in_one_turn():
     """A single decide() call emits exactly one action, and the conditions
     are mutually exclusive for any demand/cap — sweep a demand grid."""

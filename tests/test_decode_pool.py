@@ -291,6 +291,63 @@ def test_drain_engine_is_atomic_when_peers_cannot_absorb(granite):
     assert len(moved) == 2 and pool.engines[0].active == 0
 
 
+def test_drain_with_zero_live_peers_raises_and_moves_nothing(granite):
+    """Edge case: draining when every peer is parked/dead. peer_free_slots
+    must count LIVE peers only, so the all-or-nothing pre-check fails
+    cleanly instead of migrating onto a non-live engine."""
+    cfg, params = granite
+    pool = _manual_pool(cfg, params, capacity=24, n=3, batch=2)
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([[1, 2, 3, 4]],
+                                                    jnp.int32)},
+                             capacity=24, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    pool.add(0, 0, caches, first, 4, RequestResult(0, []), 4)
+    pool.retire_engine(2)                       # parked
+    pool.fail_engine(1)                         # dead
+    assert pool.peer_free_slots(0) == 0 and not pool.can_drain(0)
+    with pytest.raises(SlotError, match="all-or-nothing"):
+        pool.drain_engine(0)
+    assert pool.engines[0].active == 1 and pool.migrations == 0
+    with pytest.raises(ValueError, match="last live engine"):
+        pool.retire_engine(0)
+
+
+def test_drain_failure_mid_drain_surfaces_moves_and_conserves_slots(granite):
+    """Edge case: the capacity pre-check passes but the RDMA plane gives
+    out mid-drain. DrainError must carry the completed moves and the
+    failed rid; the failed request stays whole on the source with slot
+    accounting conserved (acquired == released + active pool-wide)."""
+    from repro.serving import (DrainError, FaultEvent, FaultInjector,
+                               FaultPlan)
+
+    cfg, params = granite
+    pool = _manual_pool(cfg, params, capacity=24, n=2, batch=2)
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([[1, 2, 3, 4]],
+                                                    jnp.int32)},
+                             capacity=24, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    for rid in (0, 1):
+        pool.add(0, rid, caches, first, 4, RequestResult(rid, []), 4)
+    # first migrate clean, second exhausts its retries
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="migrate", after=1, count=99)]))
+    transfer = KVTransferEngine(fault_hook=inj.transfer_fault, max_retries=2)
+    with pytest.raises(DrainError, match="after 1 completed moves") as ei:
+        pool.drain_engine(0, transfer)
+    assert [m[0] for m in ei.value.moved] == [0]        # rid 0 landed
+    assert ei.value.failed_rid == 1
+    # rid 1 is intact on the source engine; nothing half-moved
+    assert pool.locate(1) == (0, 1)
+    assert pool.engines[0].active == 1 and pool.engines[1].active == 1
+    assert pool.migrations == 1
+    total_acq = sum(m.acquired for m in pool.slot_mgrs)
+    total_rel = sum(m.released for m in pool.slot_mgrs)
+    assert total_acq == total_rel + pool.active
+    assert transfer.timeouts == 3                       # 1 + 2 retries
+
+
 def test_rebalance_prefers_victim_without_cache_affinity(granite):
     """Regression (affinity-thrash bug): the rebalancer used to migrate
     the hottest engine's lowest-numbered slot, which under cache_affinity

@@ -1,0 +1,420 @@
+"""Fault-tolerant serving: deterministic fault injection, engine-failure
+recovery via replay re-prefill, transfer retry/backoff semantics, and
+graceful degradation under capacity loss.
+
+The load-bearing guarantee tested here end-to-end: a run with injected
+faults (mid-decode engine crashes, RDMA timeouts/corruption, stragglers)
+emits tokens **bit-identical** to the fault-free run — greedy decode is
+deterministic, replay re-prefill is teacher-forced, so failure shows up
+only on the virtual clock, never in content."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.models import init_params, prefill
+from repro.serving import (DecodeEngine, DecodePool, FaultEvent,
+                           FaultInjector, FaultPlan, KVTransferEngine,
+                           Request, RequestResult, ServingSystem,
+                           TransferCorruption, TransferTimeout,
+                           make_decode_router)
+from repro.serving.transfer import cache_nbytes
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def stream_requests(n, prompt_len=12, max_new=6, seed=1):
+    rng = np.random.RandomState(seed)
+    return [Request(i, list(rng.randint(0, 100, prompt_len)), max_new)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Plan + injector semantics (pure control plane, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultEvent("engine_on_fire")
+    with pytest.raises(ValueError, match="explicit engine id"):
+        FaultEvent("engine_crash")                      # engine defaults -1
+    with pytest.raises(ValueError, match="unknown transfer op"):
+        FaultEvent("transfer_timeout", op="broadcast")
+    with pytest.raises(ValueError, match="factor"):
+        FaultEvent("slow_engine", factor=0.5)           # speedup forbidden
+    with pytest.raises(ValueError, match="count"):
+        FaultEvent("transfer_corrupt", count=0)
+    with pytest.raises(ValueError, match="duration"):
+        FaultEvent("slow_engine", duration=0.0)
+
+
+def test_fault_plan_parse_and_json_roundtrip():
+    plan = FaultPlan.parse(
+        '[{"kind": "engine_crash", "engine": 1, "at": 0.01},'
+        ' {"kind": "slow_engine", "factor": 2.0, "duration": null}]')
+    assert len(plan.events) == 2
+    assert plan.events[1].duration == float("inf")      # null => unbounded
+    again = FaultPlan.parse(plan.to_json())             # {"events": [...]}
+    assert again.events == plan.events
+
+
+def test_fault_plan_random_is_seed_deterministic():
+    a = FaultPlan.random(7, n_engines=3, horizon_s=0.1)
+    b = FaultPlan.random(7, n_engines=3, horizon_s=0.1)
+    c = FaultPlan.random(8, n_engines=3, horizon_s=0.1)
+    assert a.to_json() == b.to_json()
+    assert a.to_json() != c.to_json()
+    # guaranteed content: >=1 crash, and the first transfer fault is a
+    # timeout (the acceptance criterion's minimum fault mix)
+    kinds = [e.kind for e in a.events]
+    assert "engine_crash" in kinds
+    assert next(e for e in a.events
+                if e.kind.startswith("transfer")).kind == "transfer_timeout"
+
+
+def test_fault_plan_load_dispatch(tmp_path):
+    inline = FaultPlan.load('[{"kind": "engine_crash", "engine": 0}]')
+    assert inline.events[0].kind == "engine_crash"
+    fn = tmp_path / "plan.json"
+    fn.write_text(inline.to_json())
+    assert FaultPlan.load(f"@{fn}").events == inline.events
+    assert FaultPlan.load("random", seed=3, n_engines=2).to_json() \
+        == FaultPlan.random(3, n_engines=2, horizon_s=0.5).to_json()
+
+
+def test_injector_crashes_fire_once_by_engine_clock():
+    plan = FaultPlan([FaultEvent("engine_crash", engine=1, at=0.01),
+                      FaultEvent("engine_crash", engine=5, at=0.0)])
+    inj = FaultInjector(plan)
+    assert inj.due_crashes([0.0, 0.005]) == []          # not yet due
+    # engine 5 is outside this pool: marked fired, never re-armed
+    assert inj.due_crashes([0.02, 0.02]) == [1]         # due on OWN clock
+    assert inj.crashes_fired == 1
+    assert inj.due_crashes([9.9, 9.9]) == []            # fires exactly once
+
+
+def test_injector_slowdown_windows():
+    plan = FaultPlan([
+        FaultEvent("slow_engine", engine=0, at=0.01, factor=2.0,
+                   duration=0.01),
+        FaultEvent("slow_engine", engine=-1, at=0.015, factor=3.0,
+                   duration=0.001),
+    ])
+    inj = FaultInjector(plan)
+    assert inj.slowdown(0, 0.005) == 1.0                # before the window
+    assert inj.slowdown(0, 0.012) == 2.0
+    assert inj.slowdown(0, 0.0155) == 3.0               # overlap: worst wins
+    assert inj.slowdown(1, 0.0155) == 3.0               # engine=-1: everyone
+    assert inj.slowdown(1, 0.012) == 1.0
+    assert inj.slowdown(0, 0.02) == 1.0                 # window closed
+
+
+def test_injector_transfer_fault_ordinal_addressing():
+    plan = FaultPlan([
+        FaultEvent("transfer_timeout", op="transfer", after=1, count=2),
+        FaultEvent("transfer_corrupt", op="migrate", after=0, count=1),
+    ])
+    inj = FaultInjector(plan)
+    # transfer attempts: #0 clean, #1 and #2 timeout, #3 clean again
+    assert inj.transfer_fault("transfer") is None
+    assert inj.transfer_fault("transfer") == "timeout"
+    assert inj.transfer_fault("transfer") == "timeout"
+    assert inj.transfer_fault("transfer") is None
+    # migrate attempts are an independent ordinal space
+    assert inj.transfer_fault("migrate") == "corrupt"
+    assert inj.transfer_fault("migrate") is None
+    assert (inj.timeouts_injected, inj.corruptions_injected) == (2, 1)
+
+
+def test_injector_any_scope_counts_all_rdma_attempts():
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="any", after=1, count=1)]))
+    assert inj.transfer_fault("migrate") is None        # global attempt #0
+    assert inj.transfer_fault("transfer") == "timeout"  # global attempt #1
+
+
+# ---------------------------------------------------------------------------
+# KVTransferEngine: timeout + capped exponential backoff + fingerprints
+# ---------------------------------------------------------------------------
+
+
+def _payload():
+    return {"k": jnp.arange(64, dtype=jnp.float32)}
+
+
+def test_transfer_retries_through_timeouts_with_backoff():
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="transfer", count=2)]))
+    eng = KVTransferEngine(fault_hook=inj.transfer_fault, timeout_s=1e-3,
+                           max_retries=3, backoff_base_s=1e-4,
+                           backoff_cap_s=1.5e-4)
+    payload = _payload()
+    dt = eng.transfer(payload)
+    # 2 timeout windows + 2 backoffs (1e-4, then capped 1.5e-4) + the wire
+    wire_s = KVTransferEngine().transfer(_payload())
+    assert dt == pytest.approx(2 * 1e-3 + 1e-4 + 1.5e-4 + wire_s)
+    assert (eng.retries, eng.timeouts, eng.transfers) == (2, 2, 1)
+    assert eng.clock.elapsed == pytest.approx(dt)
+
+
+def test_transfer_exhaustion_raises_with_burned_seconds():
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="transfer", count=99)]))
+    eng = KVTransferEngine(fault_hook=inj.transfer_fault, timeout_s=1e-3,
+                           max_retries=2, backoff_base_s=1e-4,
+                           backoff_cap_s=1e-3)
+    with pytest.raises(TransferTimeout, match="retries exhausted") as ei:
+        eng.transfer(_payload())
+    # 3 attempts (1 + 2 retries), each a full timeout window, 2 backoffs
+    assert ei.value.attempts == 3
+    assert ei.value.seconds == pytest.approx(3 * 1e-3 + 1e-4 + 2e-4)
+    assert ei.value.seconds == pytest.approx(eng.clock.elapsed)
+    assert eng.transfers == 0                           # never delivered
+
+
+def test_transfer_corruption_charges_wire_then_retries():
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_corrupt", op="migrate", count=1)]))
+    eng = KVTransferEngine(fault_hook=inj.transfer_fault,
+                           backoff_base_s=1e-4, backoff_cap_s=1e-4)
+    payload = _payload()
+    clean = KVTransferEngine().migrate(_payload())
+    dt = eng.migrate(payload)
+    # corrupted delivery pays full wire cost, then backoff, then the clean
+    # delivery pays it again
+    assert dt == pytest.approx(2 * clean + 1e-4)
+    assert (eng.corruptions, eng.retries, eng.migrations) == (1, 1, 1)
+    assert eng.fingerprint_checks == 2
+
+    exhausted = KVTransferEngine(
+        fault_hook=FaultInjector(FaultPlan([
+            FaultEvent("transfer_corrupt", count=99)])).transfer_fault,
+        max_retries=1, backoff_base_s=1e-4, backoff_cap_s=1e-4)
+    with pytest.raises(TransferCorruption, match="corrupted"):
+        exhausted.migrate(_payload())
+
+
+def test_transfer_fault_free_path_is_cost_identical_to_seed():
+    """With no hook — and even WITH a hook that stays silent — transfer
+    cost must equal the seed engine's single plane charge exactly."""
+    payload = _payload()
+    seed = KVTransferEngine()
+    base = seed.transfer(payload)
+    hooked = KVTransferEngine(fault_hook=lambda op: None)
+    assert hooked.transfer(payload) == base
+    assert hooked.fingerprint_checks == 1               # verified, found OK
+    nbytes = cache_nbytes(payload)
+    assert seed.bytes_moved == hooked.bytes_moved == nbytes
+
+
+# ---------------------------------------------------------------------------
+# DecodePool.fail_engine: conservation, dead != parked, router residency
+# ---------------------------------------------------------------------------
+
+
+def test_fail_engine_releases_slots_and_clears_residency(granite):
+    cfg, params = granite
+    # batch 3: engine 1 keeps a free slot after two admits, so affinity
+    # (not the full-engine deprioritization) decides routing below
+    pool = DecodePool(
+        [DecodeEngine(params, cfg, 3, 24, seed=e) for e in range(2)],
+        make_decode_router("cache_affinity", 2))
+    logits, caches = prefill(params, cfg,
+                             {"tokens": jnp.asarray([[1, 2, 3, 4]],
+                                                    jnp.int32)},
+                             capacity=24, cache_dtype=jnp.float32)
+    first = int(jnp.argmax(logits[0, -1]))
+    keys = ("cc:p0", "cc:p1")
+    for rid, engine in ((0, 1), (1, 1), (2, 0)):
+        res = RequestResult(rid, [])
+        pool.add(engine, pool.engines[engine].free_slot(), caches, first,
+                 4, res, 5, block_keys=keys if engine == 1 else ())
+    assert pool.router.residency(1, keys) == 2
+    assert pool.select_engine(keys) == 1                # affinity pins 1
+
+    lost = pool.fail_engine(1)
+    assert sorted(rid for rid, _, _ in lost) == [0, 1]
+    assert all(cl == 4 for _, _, cl in lost)
+    # dead is distinct from parked, and the roster reflects it
+    assert pool.dead_ids == [1] and pool.n_dead == 1
+    assert pool.live_ids == [0] and pool.failures == 1
+    # conservation across the failure: acquired == released + active
+    mgr = pool.engines[1].slot_mgr
+    assert mgr.acquired == mgr.released + mgr.active == 2
+    assert mgr.active == 0
+    # stale residency cleared: affinity must not route to the dead engine
+    assert pool.router.residency(1, keys) == 0
+    assert pool.select_engine(keys) == 0
+    with pytest.raises(ValueError, match="already dead"):
+        pool.fail_engine(1)
+
+    # revival is a restart over the stable id
+    engine, revived = pool.spawn_engine()
+    assert (engine, revived) == (1, True)
+    assert pool.dead_ids == [] and pool.n_live == 2
+
+
+def test_spawn_prefers_parked_over_dead(granite):
+    """A parked engine (warm state) revives before a dead one (restart)."""
+    cfg, params = granite
+    pool = DecodePool(
+        [DecodeEngine(params, cfg, 2, 24, seed=e) for e in range(3)],
+        make_decode_router("round_robin", 3))
+    pool.fail_engine(2)
+    pool.retire_engine(1)                               # parked, not dead
+    engine, revived = pool.spawn_engine()
+    assert (engine, revived) == (1, True)               # warm unpark first
+    engine, revived = pool.spawn_engine()
+    assert (engine, revived) == (2, True)               # then the restart
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: crash mid-decode, recover by replay, tokens identical
+# ---------------------------------------------------------------------------
+
+
+def _fault_free_reference(params, cfg, reqs, **kw):
+    system = ServingSystem(params, cfg, **kw)
+    return {r.rid: list(r.tokens) for r in system.serve(
+        [Request(r.rid, list(r.prompt), r.max_new_tokens, r.arrival)
+         for r in reqs])}
+
+
+def test_engine_crash_recovery_token_identity(granite):
+    """The tentpole guarantee: a mid-decode engine crash loses nothing —
+    every in-flight request is recovered by re-prefilling its EMS-cached
+    prefix + teacher-forced replay of the tokens it had already emitted,
+    and the final stream is bit-identical to the fault-free run."""
+    cfg, params = granite
+    reqs = stream_requests(5, max_new=6)
+    kw = dict(n_prefill=2, decode_batch=2, capacity=32, decode_engines=2,
+              decode_router="least_loaded_slots", autoscale=True,
+              min_engines=2, max_engines=3)
+    ref = _fault_free_reference(params, cfg, reqs, **kw)
+
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("engine_crash", engine=1, at=0.004)]))
+    system = ServingSystem(params, cfg, fault_injector=inj, **kw)
+    results = system.serve(reqs)
+    got = {r.rid: list(r.tokens) for r in results}
+    assert got == ref
+    assert not any(r.shed for r in results)
+
+    s = system.scheduler.summary()
+    assert inj.crashes_fired == 1
+    assert s["engine_failures"] == 1
+    assert s["recoveries"] >= 1
+    assert s["tokens_replayed"] >= 1
+    assert s["recovery_ttft_p50_s"] > 0
+    assert s["recovery_ttft_p99_s"] >= s["recovery_ttft_p50_s"]
+    # recovery latency is charged to the recovered traces
+    recovered = [t for t in system.scheduler.tracker.finished
+                 if t.recoveries > 0]
+    assert len(recovered) == s["recoveries"]
+    assert all(t.recovery_seconds > 0 for t in recovered)
+    assert sum(t.tokens_replayed for t in recovered) == s["tokens_replayed"]
+    # the autoscaler respawned toward min_engines after the capacity loss
+    assert system.pool.n_live >= 2
+    assert any(e["action"] == "fail" for e in system.scheduler.scale_events)
+
+
+def test_transfer_timeouts_do_not_change_tokens(granite):
+    cfg, params = granite
+    reqs = stream_requests(4, max_new=4, seed=2)
+    kw = dict(n_prefill=2, decode_batch=2, capacity=32, decode_engines=2)
+    ref = _fault_free_reference(params, cfg, reqs, **kw)
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="transfer", after=1, count=2)]))
+    system = ServingSystem(params, cfg, fault_injector=inj, **kw)
+    got = {r.rid: list(r.tokens) for r in system.serve(reqs)}
+    assert got == ref
+    s = system.scheduler.summary()
+    assert s["retries"] == s["transfer_timeouts"] == 2
+    assert s["engine_failures"] == 0 and s["recoveries"] == 0
+    assert system.transfer.retries == 2
+
+
+def test_straggler_slows_clock_but_not_content(granite):
+    cfg, params = granite
+    reqs = stream_requests(4, max_new=5, seed=3)
+    kw = dict(n_prefill=1, decode_batch=2, capacity=32, decode_engines=2)
+    ref_sys = ServingSystem(params, cfg, **kw)
+    ref = {r.rid: list(r.tokens) for r in ref_sys.serve(
+        [Request(r.rid, list(r.prompt), r.max_new_tokens) for r in reqs])}
+    ref_busy = ref_sys.scheduler.summary()["engine_busy_s"]
+
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("slow_engine", engine=0, at=0.0, factor=3.0)]))
+    system = ServingSystem(params, cfg, fault_injector=inj, **kw)
+    got = {r.rid: list(r.tokens) for r in system.serve(reqs)}
+    assert got == ref                                   # content unchanged
+    busy = system.scheduler.summary()["engine_busy_s"]
+    # the straggler burned ~3x the virtual time for the same steps
+    assert busy[0] == pytest.approx(3.0 * ref_busy[0], rel=1e-6)
+    assert busy[1] == pytest.approx(ref_busy[1], rel=1e-6)
+
+
+def test_total_capacity_loss_sheds_instead_of_hanging(granite):
+    """Graceful degradation floor: with the whole pool dead and no
+    autoscaler to respawn, the system shed-fails deterministically rather
+    than deadlocking with work it can never place."""
+    cfg, params = granite
+    reqs = stream_requests(3, max_new=6, seed=4)
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("engine_crash", engine=0, at=0.002)]))
+    system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=32, fault_injector=inj)
+    results = system.serve(reqs)
+    assert len(results) == 3
+    assert any(r.shed for r in results)                 # degraded, not hung
+    s = system.scheduler.summary()
+    assert s["engine_failures"] == 1
+    assert s["completed"] + s["shed"] == 3
+    assert system.pool.n_live == 0
+
+
+def test_autoscaler_respawns_after_crash_and_completes_all(granite):
+    """Same total-loss scenario WITH an autoscaler: the dead engine is
+    respawned toward min_engines (bypassing hysteresis) and every request
+    completes with fault-free content."""
+    cfg, params = granite
+    reqs = stream_requests(3, max_new=6, seed=4)
+    kw = dict(n_prefill=1, decode_batch=2, capacity=32, autoscale=True,
+              min_engines=1, max_engines=2)
+    ref = _fault_free_reference(params, cfg, reqs, **kw)
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("engine_crash", engine=0, at=0.002)]))
+    system = ServingSystem(params, cfg, fault_injector=inj, **kw)
+    results = system.serve(reqs)
+    assert {r.rid: list(r.tokens) for r in results} == ref
+    assert not any(r.shed for r in results)
+    assert system.pool.n_live >= 1
+    events = [e["action"] for e in system.scheduler.scale_events]
+    assert "fail" in events and "grow" in events
+
+
+def test_degrade_shed_queue_bounds_backlog(granite):
+    """degrade_shed_queue_s sheds queue-mode admissions held past the
+    threshold — the post-failure backlog stays bounded instead of every
+    request waiting out the capacity dip."""
+    cfg, params = granite
+    reqs = stream_requests(8, max_new=6, seed=5)
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("engine_crash", engine=0, at=0.002)]))
+    system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=32, decode_engines=2,
+                           degrade_shed_queue_s=1e-4, fault_injector=inj)
+    results = system.serve(reqs)
+    s = system.scheduler.summary()
+    assert s["engine_failures"] == 1
+    assert s["shed"] >= 1                               # threshold bit
+    assert s["completed"] + s["shed"] == len(reqs)
+    # shed is recorded on the traces, not silently dropped
+    assert sum(r.shed for r in results) == s["shed"]
