@@ -31,12 +31,15 @@ bench-slo:
 # bench_mtp runs after bench_decode_throughput: it merges the MTP section
 # (acceptance rate + fused-MTP speedup) into the same BENCH_decode.json.
 # bench-check (its own CI step, and part of `make ci`) asserts the decode
-# artifact is schema 6: the pool autoscale section (engine-count timeline
+# artifact is schema 7: the pool autoscale section (engine-count timeline
 # + scale-event counts), the continuous_batching section (dead-slot rate
 # before/after, mid-scan refill counts, token identity, zero TPOT budget
-# violations) AND the fault_tolerance section (crash fired, every lost
+# violations), the fault_tolerance section (crash fired, every lost
 # request recovered by replay, recovery-TTFT percentiles present, faulted
-# tokens bit-identical to the fault-free reference).
+# tokens bit-identical to the fault-free reference) AND the slo_classes
+# section (interactive TPOT p99 held with class-aware control / violated
+# without on the identical burst, >= 1 mid-decode batch preemption, and
+# preempted-then-resumed tokens bit-identical to the uncontended run).
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_mtp --smoke
@@ -44,7 +47,7 @@ bench-smoke:
 
 bench-check:
 	$(PY) -c "import json; d = json.load(open('BENCH_decode.json')); \
-	assert d['schema'] == 6, f'BENCH_decode.json schema {d[\"schema\"]} != 6'; \
+	assert d['schema'] == 7, f'BENCH_decode.json schema {d[\"schema\"]} != 7'; \
 	a = d['pool']['autoscale']; \
 	assert a['engine_count_timeline'] and 'scale_grows' in a \
 	and 'scale_shrinks' in a, 'autoscale section incomplete'; \
@@ -71,12 +74,25 @@ bench-check:
 	'faulted run lost requests vs fault-free reference'; \
 	assert ft['tokens_identical_to_fault_free'] is True, \
 	'recovered tokens diverged from the fault-free run'; \
-	print('BENCH_decode.json schema 6 OK:', \
+	sc = d['slo_classes']; \
+	assert sc['held_with_control'] is True, \
+	'class-aware control failed to hold interactive TPOT p99'; \
+	assert sc['violated_without_control'] is True, \
+	'class-blind baseline did not violate the budget (burst too mild)'; \
+	assert sc['preemptions'] >= 1, 'no batch-tier preemption fired'; \
+	assert sc['tokens_identical_after_preemption'] is True, \
+	'preempted-then-resumed tokens diverged from the uncontended run'; \
+	print('BENCH_decode.json schema 7 OK:', \
 	f\"{a['scale_grows']} grows, {a['scale_shrinks']} shrinks, \" \
 	f\"peak {a['peak_engines']} engines; dead_slot_rate \" \
 	f\"{cb['before']['dead_slot_rate']} -> {cb['after']['dead_slot_rate']} \" \
 	f\"({cb['after']['mid_scan_refills']} mid-scan refills); \" \
 	f\"{ft['engine_failures']} failures -> {ft['recoveries']} recoveries, \" \
-	f\"{ft['tokens_replayed']} tokens replayed, {ft['retries']} retries\")"
+	f\"{ft['tokens_replayed']} tokens replayed, {ft['retries']} retries; \" \
+	f\"SLO held {sc['interactive_tpot_p99_ms_controlled']:.1f}ms <= \" \
+	f\"{sc['budget_ms']:g}ms < \" \
+	f\"{sc['interactive_tpot_p99_ms_uncontrolled']:.1f}ms blind, \" \
+	f\"{sc['preemptions']} preemptions, \" \
+	f\"brownout peak L{sc['brownout_peak_level']}\")"
 
 ci: smoke test bench-smoke bench-check

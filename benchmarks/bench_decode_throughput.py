@@ -116,6 +116,7 @@ def _live_rows() -> None:
     artifact["pool"] = _pool_rows()
     artifact["pool"]["autoscale"] = _autoscale_rows()
     artifact["fault_tolerance"] = _fault_rows()
+    artifact["slo_classes"] = _slo_class_rows()
     path = write_bench_artifact("decode", artifact)
     emit("decode_tput", "artifact", path, "")
 
@@ -310,6 +311,68 @@ def _fault_rows() -> dict:
          f"p50_ms={round((s.get('recovery_ttft_p50_s') or 0.0) * 1e3, 3)}")
     emit("decode_tput", "fault_tokens_identical_to_fault_free", identical,
          f"completed={s['completed']}/{section['completed_fault_free']}")
+    return section
+
+
+def _slo_class_rows() -> dict:
+    """SLO-class overload control (schema 7): the canonical mixed-class
+    overload burst (batch flood first, interactive trickle mid-decode)
+    through three runs — class-blind baseline, class-aware control
+    (per-class budgets + strict priority + batch preemption), and the
+    brownout-ladder variant. Asserted downstream by ``make bench-check``:
+    the controlled run holds interactive TPOT p99 inside the budget the
+    baseline provably violates on the identical stream, at least one batch
+    request is preempted mid-decode, and every preempted-then-resumed
+    request's emitted tokens are bit-identical to the uncontended
+    baseline's (replay re-prefill is exact)."""
+    from benchmarks.common import OVERLOAD_BUDGET_MS, live_overload_serve
+
+    base_results, base_sched, _ = live_overload_serve(class_aware=False)
+    ctrl_results, ctrl_sched, _ = live_overload_serve(class_aware=True)
+    base, ctrl = base_sched.summary(), ctrl_sched.summary()
+
+    def inter_p99_ms(s):
+        cls = s.get("classes", {}).get("interactive", s)
+        return cls["tpot_p99_s"] * 1e3
+
+    budget, eps = OVERLOAD_BUDGET_MS, 1e-6
+    b_ms, c_ms = inter_p99_ms(base), inter_p99_ms(ctrl)
+    base_tokens = {r.rid: list(r.tokens) for r in base_results if not r.shed}
+    ctrl_tokens = {r.rid: list(r.tokens) for r in ctrl_results if not r.shed}
+    preempted = sorted(t.rid for t in ctrl_sched.traces.values()
+                       if t.preemptions)
+    identical = all(ctrl_tokens.get(rid) == base_tokens.get(rid)
+                    for rid in preempted) and ctrl_tokens == base_tokens
+
+    _, brown_sched, _ = live_overload_serve(class_aware=True, brownout=True)
+    brown = brown_sched.summary()
+    section = {
+        "budget_ms": budget,
+        "interactive_tpot_p99_ms_controlled": c_ms,
+        "interactive_tpot_p99_ms_uncontrolled": b_ms,
+        "held_with_control": bool(c_ms <= budget + eps),
+        "violated_without_control": bool(b_ms > budget + eps),
+        "preemptions": ctrl["preemptions"],
+        "preempted_rids": preempted,
+        "preempt_tokens_replayed": ctrl["preempt_tokens_replayed"],
+        "tokens_identical_after_preemption": bool(identical),
+        "classes": {
+            name: {"completed": c["completed"], "shed": c["shed"]}
+            for name, c in ctrl.get("classes", {}).items()},
+        "brownout_peak_level": brown.get("brownout_peak_level", 0),
+        "brownout_transitions": brown.get("brownout_transitions", 0),
+        "brownout_timeline": brown.get("brownout_timeline", []),
+    }
+    emit("decode_tput", "slo_interactive_p99_ms_controlled", round(c_ms, 3),
+         f"budget_ms={budget:g};held={section['held_with_control']}")
+    emit("decode_tput", "slo_interactive_p99_ms_class_blind", round(b_ms, 3),
+         f"budget_ms={budget:g};"
+         f"violated={section['violated_without_control']}")
+    emit("decode_tput", "slo_batch_preemptions", ctrl["preemptions"],
+         f"rids={preempted};tokens_identical={identical}")
+    emit("decode_tput", "slo_brownout_peak_level",
+         section["brownout_peak_level"],
+         f"transitions={section['brownout_transitions']}")
     return section
 
 

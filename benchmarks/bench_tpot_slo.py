@@ -228,6 +228,54 @@ def fault_rows() -> None:
          f"undegraded_queue_p99_s={round(s['queue_p99_s'], 5)}")
 
 
+def slo_class_rows() -> None:
+    """SLO-class overload control on the canonical mixed-class burst: the
+    batch flood lands first, the interactive trickle follows mid-decode.
+    The controlled run (per-class budgets + strict priority + batch
+    preemption) must hold interactive TPOT p99 inside the 6 ms budget; the
+    class-blind baseline on the identical stream must violate it — that
+    delta is the whole point of the subsystem. A brownout variant reports
+    the ladder's transition timeline."""
+    from benchmarks.common import (OVERLOAD_BUDGET_MS, live_overload_serve)
+
+    _, base_sched, _ = live_overload_serve(class_aware=False)
+    _, ctrl_sched, _ = live_overload_serve(class_aware=True)
+    base, ctrl = base_sched.summary(), ctrl_sched.summary()
+    budget = OVERLOAD_BUDGET_MS
+
+    def inter_p99_ms(s):
+        cls = s.get("classes", {}).get("interactive", s)
+        return cls["tpot_p99_s"] * 1e3
+
+    b_ms, c_ms = inter_p99_ms(base), inter_p99_ms(ctrl)
+    eps = 1e-6  # a batch exactly at the budget holds it (float dust aside)
+    emit("tpot_slo", "slo_class_interactive_p99_ms_controlled",
+         round(c_ms, 3), f"budget_ms={budget:g};held={c_ms <= budget + eps}")
+    emit("tpot_slo", "slo_class_interactive_p99_ms_class_blind",
+         round(b_ms, 3),
+         f"budget_ms={budget:g};violated={b_ms > budget + eps}")
+    emit("tpot_slo", "slo_class_batch_preemptions", ctrl["preemptions"],
+         f"tokens_replayed={ctrl['preempt_tokens_replayed']};"
+         f"preempt_p99_ms="
+         f"{round(ctrl.get('preempt_p99_s', 0.0) * 1e3, 3)}")
+    cls = ctrl.get("classes", {})
+    for name in ("interactive", "batch"):
+        c = cls.get(name)
+        if c:
+            emit("tpot_slo", f"slo_class_{name}_completed", c["completed"],
+                 f"shed={c['shed']};"
+                 f"queue_p99_s={round(c['queue_p99_s'], 5)}")
+    _, brown_sched, _ = live_overload_serve(class_aware=True, brownout=True)
+    brown = brown_sched.summary()
+    timeline = brown.get("brownout_timeline", [])
+    emit("tpot_slo", "slo_class_brownout_peak_level",
+         brown.get("brownout_peak_level", 0),
+         f"transitions={brown.get('brownout_transitions', 0)}")
+    emit("tpot_slo", "slo_class_brownout_timeline",
+         "|".join(f"{to}@{t*1e3:.1f}ms" for t, _, to in timeline),
+         f"completed={brown['completed']};shed={brown['shed']}")
+
+
 def main() -> None:
     print("name,metric,value,derived")
     roofline_rows()
@@ -236,6 +284,7 @@ def main() -> None:
     pool_rows()
     autoscale_rows()
     fault_rows()
+    slo_class_rows()
 
 
 if __name__ == "__main__":

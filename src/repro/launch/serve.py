@@ -8,8 +8,12 @@
        cache_affinity [--rebalance-every 4]] \
       [--autoscale --min-engines 1 --max-engines 4] \
       [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
+      [--batch-tpot-budget-ms 45 --batch-admission queue|shed \
+       --interactive-frac 0.7 [--preempt-batch] [--brownout]] \
       [--decode-chunk 4 [--continuous-batching]] [--prefill-chunk 32] \
-      [--poisson-rate 100 [--open-loop]] [--seed 0] [--trace] \
+      [--poisson-rate 100 [--open-loop]] \
+      [--production [--arrival-shape poisson|burst|diurnal]] \
+      [--seed 0] [--trace] \
       [--fault-plan random|@plan.json|'[{...}]' [--fault-seed 0] \
        [--degrade-shed-queue-s 0.05]]
 """
@@ -77,9 +81,39 @@ def main() -> None:
                     help="PRNG seed for the synthetic request stream "
                          "(identical seed => identical trace)")
     ap.add_argument("--tpot-budget-ms", type=float, default=None,
-                    help="TPOT SLO budget for the admission gate (virtual ms)")
+                    help="TPOT SLO budget for the admission gate (virtual "
+                         "ms); with SLO classes this is the interactive "
+                         "tier's budget")
     ap.add_argument("--admission", default="queue", choices=("queue", "shed"),
                     help="hold or reject prefills that would break the SLO")
+    ap.add_argument("--batch-tpot-budget-ms", type=float, default=None,
+                    help="relaxed TPOT budget for the batch SLO tier "
+                         "(default: share --tpot-budget-ms)")
+    ap.add_argument("--batch-admission", default=None,
+                    choices=("queue", "shed"),
+                    help="admission mode for the batch tier "
+                         "(default: share --admission)")
+    ap.add_argument("--interactive-frac", type=float, default=1.0,
+                    help="fraction of generated requests stamped "
+                         "interactive; the rest are batch tier")
+    ap.add_argument("--preempt-batch", action="store_true",
+                    help="evict the youngest batch-tier decode slot when a "
+                         "gate-ready interactive request would otherwise "
+                         "wait (replay re-admission, token-identical)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="climb the deterministic overload ladder under "
+                         "sustained interactive pressure: shed batch "
+                         "admissions -> preempt batch -> queue-age-shed "
+                         "batch -> shed interactive")
+    ap.add_argument("--arrival-shape", default="poisson",
+                    choices=("poisson", "burst", "diurnal"),
+                    help="arrival process for --production streams")
+    ap.add_argument("--production", action="store_true",
+                    help="production workload suite: heavy-tailed "
+                         "prompt/output lengths + --interactive-frac class "
+                         "mix under --arrival-shape (requires "
+                         "--poisson-rate; --prompt-len/--max-new become "
+                         "the length medians)")
     ap.add_argument("--interleave", action="store_true",
                     help="pair two decode microbatches per step (§4.2.3)")
     ap.add_argument("--decode-chunk", type=int, default=1,
@@ -127,17 +161,32 @@ def main() -> None:
     rng = np.random.RandomState(args.seed)
     shared = min(args.shared_prefix, args.prompt_len - 1)
     open_loop = args.open_loop or args.poisson_rate is not None
-    if args.poisson_rate is not None:
+    if args.production:
+        if args.poisson_rate is None:
+            ap.error("--production requires --poisson-rate")
+        from repro.serving import production_requests
+        reqs = production_requests(
+            args.n_requests, seed=args.seed, vocab_size=cfg.vocab_size,
+            rate_rps=args.poisson_rate, arrival_shape=args.arrival_shape,
+            prompt_len_median=args.prompt_len, max_new_median=args.max_new,
+            interactive_frac=args.interactive_frac)
+    elif args.poisson_rate is not None:
         from repro.serving import poisson_requests
         reqs = poisson_requests(args.n_requests, args.poisson_rate,
                                 args.prompt_len, args.max_new,
                                 cfg.vocab_size, seed=args.seed,
                                 shared_prefix=shared)
+        for r in reqs:
+            if rng.uniform() >= args.interactive_frac:
+                r.slo_class = "batch"
     else:
         prefix = list(rng.randint(0, cfg.vocab_size, shared))
         reqs = [Request(i, prefix + list(rng.randint(0, cfg.vocab_size,
                                                      args.prompt_len - shared)),
-                        args.max_new) for i in range(args.n_requests)]
+                        args.max_new,
+                        slo_class="interactive"
+                        if rng.uniform() < args.interactive_frac
+                        else "batch") for i in range(args.n_requests)]
 
     if args.mtp and args.fit_draft:
         # Distill on the prompts actually served: a random base model's
@@ -162,9 +211,15 @@ def main() -> None:
         injector = FaultInjector(plan, seed=args.fault_seed)
         print(f"fault plan ({len(plan.events)} events): {plan.to_json()}")
 
+    # Production streams draw heavy-tailed lengths up to the generator's
+    # clip (256 prompt + 64 output tokens by default): size the KV slots
+    # for the clip, not the medians, so long-tail requests are not all
+    # capacity-rejected.
+    capacity = 256 + 64 + 8 if args.production \
+        else args.prompt_len + args.max_new + 8
     system = ServingSystem(params, cfg, n_prefill=2,
                            decode_batch=args.decode_batch,
-                           capacity=args.prompt_len + args.max_new + 8,
+                           capacity=capacity,
                            decode_engines=args.decode_engines,
                            decode_router=args.decode_router,
                            decode_rebalance_every=args.rebalance_every,
@@ -178,6 +233,10 @@ def main() -> None:
                            policy=args.policy,
                            tpot_budget_ms=args.tpot_budget_ms,
                            admission=args.admission,
+                           batch_tpot_budget_ms=args.batch_tpot_budget_ms,
+                           batch_admission=args.batch_admission,
+                           preempt_batch=args.preempt_batch or None,
+                           brownout=args.brownout or None,
                            interleave=args.interleave,
                            decode_chunk=args.decode_chunk,
                            continuous_batching=args.continuous_batching
@@ -197,9 +256,27 @@ def main() -> None:
     print(f"\n{len(results)} requests, {total_new} tokens in {dt:.2f}s wall "
           f"({total_new/dt:.1f} tok/s on CPU smoke config)")
     summary = system.scheduler.summary()
+    classes = summary.pop("classes", None)
+    brownout_timeline = summary.pop("brownout_timeline", None)
     print("SLO summary (virtual clock): "
           + ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
                       for k, v in summary.items()))
+    if classes:
+        for cls, cs in sorted(classes.items()):
+            print(f"  class {cls}: " + ", ".join(
+                f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                for k, v in cs.items()))
+    if args.preempt_batch or args.brownout or summary.get("preemptions"):
+        print(f"preemptions: {summary.get('preemptions', 0)} "
+              f"(tokens replayed "
+              f"{summary.get('preempt_tokens_replayed', 0)})")
+    if args.brownout:
+        print("brownout: level "
+              + (" -> ".join(f"{to}@{t*1e3:.1f}ms"
+                             for t, _frm, to in brownout_timeline)
+                 if brownout_timeline else "0 throughout")
+              + f" (now {summary.get('brownout_level', 0)}, peak "
+              f"{summary.get('brownout_peak_level', 0)})")
     if args.decode_engines > 1 or system.pool.n > 1:
         util = summary.get("engine_util", [])
         print("decode pool: " + ", ".join(

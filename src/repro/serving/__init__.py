@@ -8,6 +8,7 @@ from repro.serving.engine import (  # noqa: F401
 from repro.serving.scheduler import (  # noqa: F401
     ROUTERS,
     AdmissionGate,
+    BrownoutLadder,
     DecodeCostModel,
     DecodeSlotManager,
     LeastLoadedRouter,
@@ -34,7 +35,12 @@ from repro.serving.pool import (  # noqa: F401
     PoolRoundRobinRouter,
     make_decode_router,
 )
-from repro.serving.workload import poisson_requests  # noqa: F401
+from repro.serving.workload import (  # noqa: F401
+    ARRIVAL_SHAPES,
+    multi_turn_sessions,
+    poisson_requests,
+    production_requests,
+)
 from repro.serving.transfer import (  # noqa: F401
     KVTransferEngine,
     TransferCorruption,

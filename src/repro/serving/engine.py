@@ -53,6 +53,9 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     arrival: float = 0.0
+    # SLO tier: "interactive" (stringent TPOT budget, protected under
+    # overload) or "batch" (relaxed budget; first to degrade).
+    slo_class: str = "interactive"
 
 
 @dataclasses.dataclass
@@ -65,6 +68,7 @@ class RequestResult:
     transfer_seconds: float = 0.0
     decode_iters: int = 0
     shed: bool = False
+    slo_class: str = "interactive"
 
 
 # ---------------------------------------------------------------------------
@@ -696,6 +700,12 @@ class ServingSystem:
                  continuous_batching: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
                  degrade_shed_queue_s: Optional[float] = None,
+                 batch_tpot_budget_ms: Optional[float] = None,
+                 batch_admission: Optional[str] = None,
+                 preempt_batch: Optional[bool] = None,
+                 brownout: Optional[bool] = None,
+                 brownout_patience: Optional[int] = None,
+                 brownout_cooldown: Optional[int] = None,
                  scheduler_config: Optional[SchedulerConfig] = None,
                  fault_injector: Optional[FaultInjector] = None):
         self.cfg = cfg
@@ -710,6 +720,12 @@ class ServingSystem:
             ("autoscale", autoscale),
             ("min_engines", min_engines), ("max_engines", max_engines),
             ("degrade_shed_queue_s", degrade_shed_queue_s),
+            ("batch_tpot_budget_ms", batch_tpot_budget_ms),
+            ("batch_admission", batch_admission),
+            ("preempt_batch", preempt_batch),
+            ("brownout", brownout),
+            ("brownout_patience", brownout_patience),
+            ("brownout_cooldown", brownout_cooldown),
         ) if v is not None}
         # use_mtp is engine state, not policy: the scheduler's MTP cost
         # accounting must always match what the decode engine actually runs
@@ -841,37 +857,38 @@ class ServingSystem:
         return [self._replay_recover(rid, payload, fail_t)
                 for rid, payload, _cache_len in lost]
 
-    def _replay_recover(self, rid: int, slot_payload: "_Slot",
-                        fail_t: float) -> "_PendingAdmission":
-        """Rebuild a crashed request's KV: re-prefill its prompt plus a
-        teacher-forced replay of every already-emitted token but the last
+    def _replay_rebuild(self, rid: int, slot_payload: "_Slot",
+                        at: float) -> Tuple["_PendingAdmission", int]:
+        """Rebuild an interrupted request's KV: re-prefill its prompt plus
+        a teacher-forced replay of every already-emitted token but the last
         (EMS-cached prefix blocks are reused, so mostly only the emitted
         suffix is recomputed), and verify greedy determinism — the replay
         prefill's next-token argmax must reproduce the last emitted token.
-        The recovered output is therefore token-identical to the
-        fault-free run by construction, not by luck."""
+        The rebuilt output is therefore token-identical to the
+        uninterrupted run by construction, not by luck. Shared by engine-
+        failure recovery and batch-tier preemption; returns the pending
+        re-admission and the replayed-token count."""
         sched = self.scheduler
         req: Request = self._inflight[rid]
-        trace = sched.traces[rid]
         result = slot_payload.result
         remaining = slot_payload.remaining
         emitted = list(result.tokens)
         if not emitted or remaining <= 0:
             raise SlotError(
-                f"rid={rid} crashed with no emitted token or no budget "
+                f"rid={rid} interrupted with no emitted token or no budget "
                 f"({len(emitted)} emitted, {remaining} remaining) — a live "
                 "slot always holds >= 1 token and wants >= 1 more")
         replay = list(req.prompt) + emitted[:-1]
         first, caches, rres = self.prefills[0].run(
-            Request(rid, replay, 1, arrival=fail_t))
+            Request(rid, replay, 1, arrival=at))
         if first != emitted[-1]:
             raise RuntimeError(
                 f"replay re-prefill diverged for rid={rid}: argmax after "
                 f"teacher-forcing {len(replay)} tokens gave {first}, the "
-                f"crashed engine had emitted {emitted[-1]} — greedy decode "
-                "must be deterministic for recovery to be token-exact")
+                f"interrupted engine had emitted {emitted[-1]} — greedy "
+                "decode must be deterministic for replay to be token-exact")
         _, prefill_done = sched.charge_recovery_prefill(
-            rres.computed_tokens, fail_t)
+            rres.computed_tokens, at)
         # Re-handoff over the RDMA plane. Fault-plan events may still claim
         # these attempts; an exhausted handoff costs more virtual time and
         # is simply re-sent (the plan is finite, so this terminates).
@@ -883,14 +900,38 @@ class ServingSystem:
             except TransferError as exc:
                 tdt += exc.seconds
         ready = prefill_done + tdt
-        sched.on_recovery(trace, fail_t,
-                          tokens_replayed=len(emitted) - 1, ready_at=ready)
         del result.tokens[-1:]   # pool.add re-appends the verified token
         keys = tuple(self.cc.block_keys(replay)) \
             if self.cc is not None and self.pool.router.uses_affinity else ()
         return _PendingAdmission(first, caches, len(replay), result,
                                  remaining + 1, keys,
-                                 ready_at=ready, recovered=True)
+                                 ready_at=ready, recovered=True), \
+            len(emitted) - 1
+
+    def _replay_recover(self, rid: int, slot_payload: "_Slot",
+                        fail_t: float) -> "_PendingAdmission":
+        """Engine-failure recovery: rebuild the crashed slot by replay
+        re-prefill and charge the latency as a recovery on the trace."""
+        item, replayed = self._replay_rebuild(rid, slot_payload, fail_t)
+        self.scheduler.on_recovery(self.scheduler.traces[rid], fail_t,
+                                   tokens_replayed=replayed,
+                                   ready_at=item.ready_at)
+        return item
+
+    def _preempt_request(self, rid: int) -> "_PendingAdmission":
+        """Batch-tier preemption: evict ``rid``'s decode slot (the engine
+        stays live; slot accounting is conserved), park its prompt +
+        emitted tokens, and rebuild the KV by the same teacher-forced
+        replay as failure recovery — so the resumed request finishes
+        token-identical to the unpreempted run. The eviction-to-ready
+        latency is charged to the victim's trace as ``preempt_seconds``."""
+        sched = self.scheduler
+        engine, payload, _cache_len = self.pool.evict(rid)
+        t = sched.engine_clock(engine)
+        item, replayed = self._replay_rebuild(rid, payload, t)
+        sched.on_preempt(sched.traces[rid], t, tokens_replayed=replayed,
+                         ready_at=item.ready_at)
+        return item
 
     def _make_autoscaler(self) -> Optional[PoolAutoscaler]:
         """One PoolAutoscaler per serve() wave, built from the scheduler's
@@ -1003,12 +1044,106 @@ class ServingSystem:
             results.append(item.result)
             self._inflight.pop(item.result.rid, None)
 
+        def item_class(item: _PendingAdmission) -> str:
+            return sched.traces[item.result.rid].slo_class
+
+        def youngest_batch_victim() -> Optional[int]:
+            """Preemption victim: the most recently admitted batch-tier
+            slot across the live pool (max decode_admit; rid breaks ties
+            deterministically). Interactive slots are never victims."""
+            best = None
+            for e in self.pool.live_ids:
+                for _slot, info in \
+                        self.pool.engines[e].slot_mgr.active_slots():
+                    tr = sched.traces.get(info.rid)
+                    if tr is None or tr.slo_class != "batch":
+                        continue
+                    key = (tr.decode_admit, tr.rid)
+                    if best is None or key > best[0]:
+                        best = (key, tr.rid)
+            return None if best is None else best[1]
+
+        def try_preempt(item: _PendingAdmission, trace,
+                        parked: List[_PendingAdmission]) -> Tuple[str, int]:
+            """Evict youngest batch-tier slots until ``item`` (interactive,
+            gate-blocked) becomes admissible or no victims remain. Each
+            victim is parked as a recovered-style pending re-admission at
+            the BACK of the queue (deprioritized — that is the point of
+            preemption). Bounded by the pool's batch-tier slot count."""
+            while True:
+                victim = youngest_batch_victim()
+                if victim is None:
+                    return "wait", 0
+                parked.append(self._preempt_request(victim))
+                engine = self.pool.select_engine(item.block_keys)
+                decision = sched.admission_decision(trace, engine,
+                                                    recovered=item.recovered)
+                if decision != "wait":
+                    return decision, engine
+
+        def admit_class(items: List[_PendingAdmission], mid_turn: bool,
+                        parked: List[_PendingAdmission]
+                        ) -> Tuple[List[_PendingAdmission], bool]:
+            """One SLO class's FIFO admission pass: admit gate-ready items
+            in order; the gate may queue or shed. Returns ``(kept,
+            ready_blocked)`` — ``ready_blocked`` means a gate-ready item
+            is still waiting (under strict priority a blocked interactive
+            pass bars the batch pass, and it is the brownout ladder's
+            pressure signal)."""
+            kept: List[_PendingAdmission] = []
+            for idx, item in enumerate(items):
+                trace = sched.traces[item.result.rid]
+                ready = item_ready(item)
+                if open_loop and ready > sched.decode_now + eps:
+                    # KV not yet ready on the open-loop clock: hold, and
+                    # within-class FIFO holds the rest of the class.
+                    kept.extend(items[idx:])
+                    return kept, False
+                engine = self.pool.select_engine(item.block_keys)
+                decision = sched.admission_decision(trace, engine,
+                                                    recovered=item.recovered)
+                if decision == "shed" and item.recovered:
+                    # Recovered/preempted requests already streamed tokens;
+                    # shedding them would break replay token identity. They
+                    # queue through shed modes and brownout levels alike.
+                    decision = "wait"
+                if (decision == "wait" and sched.preemption_enabled
+                        and trace.slo_class != "batch"):
+                    decision, engine = try_preempt(item, trace, parked)
+                if decision == "admit":
+                    slot = self.pool.engines[engine].free_slot()
+                    if slot is None:
+                        # Stale admission: the gate said "admit" but no slot
+                        # is actually free (gate/slot state diverged). Never
+                        # pass slot=None into DecodeSlotManager.allocate —
+                        # requeue and retry after the next decode turn.
+                        kept.extend(items[idx:])
+                        return kept, True
+                    self.pool.add(engine, slot, item.caches, item.first,
+                                  item.prompt_len, item.result, item.max_new,
+                                  item.block_keys)
+                    if item.recovered:
+                        sched.on_readmit(trace, engine, ready)
+                    else:
+                        sched.on_admit(trace, slot, engine)
+                    if mid_turn:
+                        sched.note_mid_scan_refill()
+                elif decision == "shed":
+                    shed_item(item)
+                else:  # wait: keep within-class FIFO, stop this class
+                    kept.extend(items[idx:])
+                    return kept, True
+            return kept, False
+
         def admit_waiting(mid_turn: bool = False) -> None:
-            """Admit gate-ready requests in FIFO order; the gate may queue
-            or shed (SLO control). Runs once per wave boundary, and — under
-            continuous batching — again after each engine's chunk drains
-            (``mid_turn``), so a freed slot takes the next admission before
-            the next engine steps instead of waiting out the whole turn."""
+            """Admit gate-ready requests with strict SLO-class priority:
+            the interactive tier first (FIFO within the class), then the
+            batch tier only if no gate-ready interactive request is still
+            blocked — batch never delays a gate-ready interactive request.
+            Runs once per wave boundary, and — under continuous batching —
+            again after each engine's chunk drains (``mid_turn``), so a
+            freed slot takes the next admission before the next engine
+            steps instead of waiting out the whole turn."""
             nonlocal waiting
             if not self.pool.live_ids:
                 # Total capacity loss. With an autoscaler the respawn path
@@ -1021,48 +1156,44 @@ class ServingSystem:
                     waiting = []
                 return
             degrade = sched.config.degrade_shed_queue_s
-            still_waiting: List[_PendingAdmission] = []
-            for idx, item in enumerate(waiting):
-                trace = sched.traces[item.result.rid]
-                ready = item_ready(item)
-                if open_loop and ready > sched.decode_now + eps:
-                    # KV not yet ready on the open-loop clock: hold (FIFO)
-                    still_waiting.extend(waiting[idx:])
-                    break
-                if (degrade is not None and not item.recovered
-                        and sched.decode_now - ready > degrade + eps):
-                    # Graceful degradation: post-failure capacity pressure
-                    # has held this request past the shed threshold — cut
-                    # it loose even in queue mode instead of growing an
-                    # unbounded backlog on a shrunken pool.
-                    shed_item(item)
-                    continue
-                engine = self.pool.select_engine(item.block_keys)
-                decision = sched.admission_decision(trace, engine)
-                if decision == "admit":
-                    slot = self.pool.engines[engine].free_slot()
-                    if slot is None:
-                        # Stale admission: the gate said "admit" but no slot
-                        # is actually free (gate/slot state diverged). Never
-                        # pass slot=None into DecodeSlotManager.allocate —
-                        # requeue and retry after the next decode turn.
-                        still_waiting.extend(waiting[idx:])
-                        break
-                    self.pool.add(engine, slot, item.caches, item.first,
-                                  item.prompt_len, item.result, item.max_new,
-                                  item.block_keys)
+            now = sched.decode_now
+            # Class-ordered queue-age shedding: graceful degradation
+            # (degrade_shed_queue_s) plus the brownout ladder's level-3
+            # batch-age shed. At equal queue age the batch-tier backlog is
+            # cut before any interactive request — interactive over-age
+            # sheds only in a round with no over-age batch left. Recovered/
+            # preempted items are exempt (replay identity).
+            if degrade is not None or sched.brownout_level >= 3:
+                over_batch: List[_PendingAdmission] = []
+                over_inter: List[_PendingAdmission] = []
+                for item in waiting:
                     if item.recovered:
-                        sched.on_readmit(trace, engine, ready)
-                    else:
-                        sched.on_admit(trace, slot, engine)
-                    if mid_turn:
-                        sched.note_mid_scan_refill()
-                elif decision == "shed":
+                        continue
+                    age = now - item_ready(item)
+                    batch_tier = item_class(item) == "batch"
+                    if degrade is not None and age > degrade + eps:
+                        (over_batch if batch_tier else over_inter).append(item)
+                    elif (batch_tier and sched.brownout_level >= 3
+                          and age > sched.config.brownout_queue_age_s + eps):
+                        over_batch.append(item)
+                for item in over_batch or over_inter:
                     shed_item(item)
-                else:  # wait: keep FIFO order, stop admitting this round
-                    still_waiting.extend(waiting[idx:])
-                    break
-            waiting = still_waiting
+                waiting = [it for it in waiting if not it.result.shed]
+            # Strict-priority class passes. Preempted victims are parked
+            # during the interactive pass and re-enter at the back of the
+            # queue; the merged keep-list preserves arrival order so each
+            # class's FIFO survives the partition.
+            parked: List[_PendingAdmission] = []
+            inter = [it for it in waiting if item_class(it) != "batch"]
+            batch = [it for it in waiting if item_class(it) == "batch"]
+            inter_kept, ready_blocked = admit_class(inter, mid_turn, parked)
+            if ready_blocked:
+                batch_kept = batch   # batch never jumps a blocked interactive
+            else:
+                batch_kept, _ = admit_class(batch, mid_turn, parked)
+            keep = {id(it) for it in inter_kept}
+            keep.update(id(it) for it in batch_kept)
+            waiting = [it for it in waiting if id(it) in keep] + parked
 
         def refill_imminent(engine: int) -> bool:
             """Could an admission land on ``engine`` around its next chunk?
@@ -1097,7 +1228,9 @@ class ServingSystem:
             while pending and (not open_loop or
                                pending[0].arrival <= sched.decode_now + eps):
                 req = pending.pop(0)
-                trace = sched.on_arrival(req.rid, req.arrival, len(req.prompt))
+                trace = sched.on_arrival(req.rid, req.arrival,
+                                         len(req.prompt),
+                                         slo_class=req.slo_class)
                 # max_new <= 1 never decodes, so only the prompt must fit
                 # (in the prefill cache, which shares `capacity`).
                 need = len(req.prompt) if req.max_new_tokens <= 1 \
@@ -1105,7 +1238,8 @@ class ServingSystem:
                 if need > self.decode.capacity:
                     # Reject up front: admitting would overflow the static KV
                     # slot mid-decode and abort the whole batch.
-                    res = RequestResult(req.rid, [], shed=True)
+                    res = RequestResult(req.rid, [], shed=True,
+                                        slo_class=req.slo_class)
                     sched.on_shed(trace)
                     sched.on_finish(trace, 0)
                     results.append(res)
@@ -1113,6 +1247,7 @@ class ServingSystem:
                 eng = self.prefills[sched.route_prefill(
                     trace, [e.load for e in self.prefills])]
                 first, caches, res = eng.run(req)
+                res.slo_class = req.slo_class
                 sched.on_prefill_done(trace, eng.instance_id,
                                       res.computed_tokens, res.reused_tokens)
                 if req.max_new_tokens <= 1:
@@ -1134,6 +1269,15 @@ class ServingSystem:
                                                  len(req.prompt), res,
                                                  req.max_new_tokens, keys))
             admit_waiting()
+            # Brownout ladder tick: one pressure observation per loop turn.
+            # Pressure = a gate-ready interactive request is still blocked
+            # after admission ran; calm turns (including idle ones) let the
+            # ladder descend, so a drained burst always steps back down.
+            if sched.config.brownout:
+                now = sched.decode_now + eps
+                sched.note_overload(any(
+                    item_class(it) != "batch" and item_ready(it) <= now
+                    for it in waiting))
             # decode turn: decode_chunk device iterations per host sync on
             # the fast path; every engine with active slots steps, and each
             # engine's virtual clock is charged per iteration so trace/SLO

@@ -148,6 +148,16 @@ class FaultPlan:
                 duration=rng.uniform(0.1, 0.5) * horizon_s))
         return cls(events)
 
+    def __add__(self, other: "FaultPlan") -> "FaultPlan":
+        """Compose two plans into one schedule (self's events first —
+        order is the tie-break for transfer-fault claims, so composition
+        is deterministic and associative but not commutative). Lets the
+        workload soak cross a crash plan with a straggler/transfer plan
+        without regenerating either."""
+        if not isinstance(other, FaultPlan):
+            return NotImplemented
+        return FaultPlan(list(self.events) + list(other.events))
+
     def to_json(self) -> str:
         return json.dumps({"events": [e.to_dict() for e in self.events]})
 

@@ -273,6 +273,7 @@ class DecodePool:
         self.migrations = 0
         self.migrated_bytes = 0
         self.failures = 0
+        self.preemptions = 0
 
     @staticmethod
     def _assert_homogeneous(engines: Sequence) -> None:
@@ -406,6 +407,24 @@ class DecodePool:
         self.failures += 1
         self.router.on_retire(engine)
         return lost
+
+    def evict(self, rid: int) -> Tuple[int, Any, int]:
+        """Preempt one in-flight request: release its slot with conserved
+        accounting and return ``(engine, payload, cache_len)`` so the
+        serving layer can park it (prompt + emitted tokens) for replay
+        re-admission. The engine stays live — unlike :meth:`fail_engine`
+        its router residency is kept, so a cache-affine re-admission can
+        still prefer the engine whose EMS blocks are warm. The freed
+        slot's device-side KV is abandoned in place: a later ``add`` on
+        the slot overwrites it, exactly like post-failure slot reuse."""
+        loc = self.locate(rid)
+        if loc is None:
+            raise SlotError(f"rid {rid} is not decoding on any engine")
+        engine, slot = loc
+        info = self.engines[engine].slot_mgr.release(slot)
+        self._request_keys.pop(rid, None)
+        self.preemptions += 1
+        return engine, info.payload, info.cache_len
 
     def spawn_engine(self) -> Tuple[int, bool]:
         """Grow the pool by one live engine. Returns ``(engine, revived)``:

@@ -61,6 +61,7 @@ class RequestTrace:
     rid: int
     arrival: float = 0.0
     prompt_tokens: int = 0
+    slo_class: str = "interactive"   # SLO tier: "interactive" | "batch"
     prefill_instance: int = -1
     prefill_start: float = 0.0
     prefill_end: float = 0.0
@@ -80,6 +81,8 @@ class RequestTrace:
     recoveries: int = 0      # engine-failure recoveries (replay re-prefill)
     tokens_replayed: int = 0  # already-emitted tokens teacher-forced back
     recovery_seconds: float = 0.0  # failure detection -> KV re-ready
+    preemptions: int = 0     # batch-tier evictions under interactive pressure
+    preempt_seconds: float = 0.0   # eviction -> replay KV re-ready
     tokens_out: int = 0
     shed: bool = False
 
@@ -419,16 +422,35 @@ class AdmissionGate:
     budget, admission keeps the active decode batch at or below the largest
     B with ``t(B) <= budget``; projected TPOT therefore never exceeds the
     budget for any admitted request.
+
+    The gate is class-indexed: ``class_budgets``/``class_modes`` map an SLO
+    class (e.g. ``"batch"``) to its own TPOT budget and queue/shed mode;
+    classes without an entry fall back to the base budget/mode, so the
+    default two-argument construction is exactly the pre-class gate. Batch
+    step time is a property of the *whole* batch, not of the joining
+    request, so the effective cap for an admission is the strictest cap
+    over the joining class AND every class already resident on the target
+    engine — a relaxed-budget batch request may not inflate the batch past
+    what a co-resident interactive request's budget allows.
     """
 
     def __init__(self, cost: DecodeCostModel,
                  tpot_budget_s: Optional[float] = None,
-                 mode: str = "queue"):
+                 mode: str = "queue", *,
+                 class_budgets: Optional[Dict[str, Optional[float]]] = None,
+                 class_modes: Optional[Dict[str, str]] = None):
         if mode not in ("queue", "shed"):
             raise ValueError(f"admission mode must be queue|shed, got {mode!r}")
         self.cost = cost
         self.budget_s = tpot_budget_s
         self.mode = mode
+        self.class_budgets = dict(class_budgets or {})
+        self.class_modes = dict(class_modes or {})
+        for cls, m in self.class_modes.items():
+            if m not in ("queue", "shed"):
+                raise ValueError(
+                    f"admission mode for class {cls!r} must be queue|shed, "
+                    f"got {m!r}")
         self.max_batch: Optional[int] = None
         if tpot_budget_s is not None:
             self.max_batch = cost.max_batch_for(tpot_budget_s)
@@ -437,18 +459,55 @@ class AdmissionGate:
                     f"TPOT budget {tpot_budget_s*1e3:.1f} ms is below the "
                     f"fixed decode cost {cost.fixed_s*1e3:.1f} ms — no batch "
                     "size can meet it (use mode='shed' to reject instead)")
+        self.class_caps: Dict[str, Optional[int]] = {}
+        for cls, budget in self.class_budgets.items():
+            cap = None if budget is None else cost.max_batch_for(budget)
+            if cap == 0 and self.mode_for(cls) == "queue":
+                raise ValueError(
+                    f"TPOT budget {budget*1e3:.1f} ms for class {cls!r} is "
+                    f"below the fixed decode cost {cost.fixed_s*1e3:.1f} ms "
+                    "— no batch size can meet it (use mode='shed' to reject "
+                    "instead)")
+            self.class_caps[cls] = cap
 
-    def admissible(self, active: int) -> bool:
+    def cap_for(self, slo_class: str = "interactive") -> Optional[int]:
+        """Largest admissible batch for one class (None = slot-limited)."""
+        if slo_class in self.class_caps:
+            return self.class_caps[slo_class]
+        return self.max_batch
+
+    def mode_for(self, slo_class: str = "interactive") -> str:
+        return self.class_modes.get(slo_class, self.mode)
+
+    def admissible(self, active: int, slo_class: str = "interactive",
+                   resident_classes: Sequence[str] = ()) -> bool:
         """May one more request join a batch currently ``active`` deep?"""
-        return self.max_batch is None or active < self.max_batch
+        caps = [self.cap_for(c) for c in {slo_class, *resident_classes}]
+        caps = [c for c in caps if c is not None]
+        return not caps or active < min(caps)
 
-    def decide(self, active: int, has_free_slot: bool) -> str:
-        """'admit' | 'wait' | 'shed' for the head-of-queue request."""
+    def decide(self, active: int, has_free_slot: bool,
+               slo_class: str = "interactive",
+               resident_classes: Sequence[str] = (),
+               mode_override: Optional[str] = None) -> str:
+        """'admit' | 'wait' | 'shed' for the head-of-queue request.
+
+        ``mode_override`` forces the queue/shed decision regardless of the
+        class's configured mode (the brownout ladder sheds whole classes
+        this way) — it does not widen admissibility, only what happens to
+        an inadmissible request.
+        """
+        mode = mode_override if mode_override is not None \
+            else self.mode_for(slo_class)
+        if mode == "shed" and mode_override is not None:
+            # Brownout-level shed rejects the class outright: a browned-out
+            # class must not trickle in through free slots.
+            return "shed"
         if not has_free_slot:
             return "wait"
-        if self.admissible(active):
+        if self.admissible(active, slo_class, resident_classes):
             return "admit"
-        return "shed" if self.mode == "shed" else "wait"
+        return "shed" if mode == "shed" else "wait"
 
 
 # ---------------------------------------------------------------------------
@@ -472,17 +531,18 @@ class SLOTracker:
             return float("nan")
         return float(np.percentile(np.asarray(values), q))
 
-    def summary(self) -> Dict[str, float]:
-        ttfts = [t.ttft for t in self.finished]
-        tpots = [t.tpot for t in self.finished if t.decode_iters > 0]
+    def _stats(self, finished: List[RequestTrace],
+               shed: List[RequestTrace]) -> Dict[str, float]:
+        ttfts = [t.ttft for t in finished]
+        tpots = [t.tpot for t in finished if t.decode_iters > 0]
         # Queue statistics span finished AND shed traces: a request that
         # queued long and was then shed is exactly the queueing pressure
         # the percentile must not hide (shed traces stamp their queue time
         # at the shed instant).
-        queues = [t.queue_seconds for t in self.finished + self.shed]
+        queues = [t.queue_seconds for t in finished + shed]
         return {
-            "completed": len(self.finished),
-            "shed": len(self.shed),
+            "completed": len(finished),
+            "shed": len(shed),
             "ttft_p50_s": self._pct(ttfts, 50),
             "ttft_p99_s": self._pct(ttfts, 99),
             "tpot_p50_s": self._pct(tpots, 50),
@@ -490,8 +550,22 @@ class SLOTracker:
             "tpot_max_s": max(tpots) if tpots else float("nan"),
             "queue_p99_s": self._pct(queues, 99),
             "queue_p99_shed_s": self._pct([t.queue_seconds
-                                           for t in self.shed], 99),
+                                           for t in shed], 99),
         }
+
+    def summary(self) -> Dict[str, float]:
+        s = self._stats(self.finished, self.shed)
+        # Per-class breakdown only when the wave actually carried more than
+        # the default class: single-class summaries stay flat (and older
+        # consumers that iterate the summary see no nested dict).
+        classes = sorted({t.slo_class for t in self.finished + self.shed})
+        if classes and classes != ["interactive"]:
+            s["classes"] = {
+                cls: self._stats(
+                    [t for t in self.finished if t.slo_class == cls],
+                    [t for t in self.shed if t.slo_class == cls])
+                for cls in classes}
+        return s
 
 
 # ---------------------------------------------------------------------------
@@ -530,6 +604,59 @@ class MicrobatchInterleaver:
             return mb({"tok": tokens, "len": cache_len}, caches)
 
         return wrapped
+
+
+# ---------------------------------------------------------------------------
+# Brownout ladder (deterministic overload degradation)
+# ---------------------------------------------------------------------------
+
+
+class BrownoutLadder:
+    """Deterministic overload ladder the scheduler climbs under sustained
+    interactive pressure, one rung per ``patience`` consecutive pressured
+    turns, and descends one rung per ``cooldown`` consecutive calm turns:
+
+      level 0  healthy — class budgets/modes as configured
+      level 1  shed new batch-tier admissions
+      level 2  ... and preempt batch-tier decode slots for interactive
+      level 3  ... and queue-age-shed queued batch older than the brownout
+               threshold
+      level 4  ... and shed interactive admissions too (last resort)
+
+    Pure hysteresis state machine on the virtual clock — no randomness, so
+    identical pressure sequences produce identical ladders.
+    """
+
+    MAX_LEVEL = 4
+
+    def __init__(self, patience: int = 2, cooldown: int = 2):
+        if patience < 1 or cooldown < 1:
+            raise ValueError("brownout patience/cooldown must be >= 1")
+        self.patience = patience
+        self.cooldown = cooldown
+        self.level = 0
+        self._pressured_turns = 0
+        self._calm_turns = 0
+
+    def observe(self, pressured: bool) -> Optional[Dict[str, int]]:
+        """Feed one turn's pressure signal; returns a transition event
+        ``{"from": .., "to": ..}`` when the level changes, else None."""
+        if pressured:
+            self._pressured_turns += 1
+            self._calm_turns = 0
+            if (self._pressured_turns >= self.patience
+                    and self.level < self.MAX_LEVEL):
+                self._pressured_turns = 0
+                self.level += 1
+                return {"from": self.level - 1, "to": self.level}
+        else:
+            self._calm_turns += 1
+            self._pressured_turns = 0
+            if self._calm_turns >= self.cooldown and self.level > 0:
+                self._calm_turns = 0
+                self.level -= 1
+                return {"from": self.level + 1, "to": self.level}
+        return None
 
 
 # ---------------------------------------------------------------------------
@@ -594,7 +721,34 @@ class SchedulerConfig:
     # virtual seconds is shed even in queue mode — after an engine failure
     # the shrunken pool sheds its backlog instead of growing an unbounded
     # queue. None keeps queue mode unconditional (the pre-fault behavior).
+    # Class-ordered: at equal queue age, batch-tier backlog sheds before
+    # any interactive request does.
     degrade_shed_queue_s: Optional[float] = None
+    # --- SLO classes (overload control) -----------------------------------
+    # Batch-tier overrides for the admission gate. tpot_budget_ms/admission
+    # above are the base (interactive) budget/mode; None here means the
+    # batch tier shares them (the pre-class behavior). A relaxed batch
+    # budget lets batch fill deep batches on its own, but the gate still
+    # caps any batch that an interactive request is resident in at the
+    # interactive cap (see AdmissionGate).
+    batch_tpot_budget_ms: Optional[float] = None
+    batch_admission: Optional[str] = None    # "queue" | "shed" | None=base
+    # Preempt batch-tier decode slots when a gate-ready interactive request
+    # would otherwise wait: the youngest batch slot is evicted (KV parked
+    # as prompt + emitted tokens), replay re-prefilled, and re-admitted
+    # later — token-identical to the unpreempted run, latency charged to
+    # the victim's trace (preempt_seconds).
+    preempt_batch: bool = False
+    # Brownout ladder: under sustained overload the scheduler climbs a
+    # deterministic degradation ladder (shed batch admissions → preempt
+    # batch → queue-age-shed batch → shed interactive); transitions are
+    # recorded as trace events. Patience/cooldown are the hysteresis in
+    # decode turns; brownout_queue_age_s is the level-3 batch queue-age
+    # shed threshold.
+    brownout: bool = False
+    brownout_patience: int = 2
+    brownout_cooldown: int = 2
+    brownout_queue_age_s: float = 0.05
 
 
 class Scheduler:
@@ -632,8 +786,20 @@ class Scheduler:
         self.cost = cost
         budget_s = (None if self.config.tpot_budget_ms is None
                     else self.config.tpot_budget_ms * 1e-3)
-        self.gate = AdmissionGate(self.cost, budget_s, self.config.admission)
+        self.gate = AdmissionGate(self.cost, budget_s, self.config.admission,
+                                  class_budgets=self._class_budgets(),
+                                  class_modes=self._class_modes())
         self.begin_epoch()
+
+    def _class_budgets(self) -> Optional[Dict[str, Optional[float]]]:
+        if self.config.batch_tpot_budget_ms is None:
+            return None
+        return {"batch": self.config.batch_tpot_budget_ms * 1e-3}
+
+    def _class_modes(self) -> Optional[Dict[str, str]]:
+        if self.config.batch_admission is None:
+            return None
+        return {"batch": self.config.batch_admission}
 
     def begin_epoch(self) -> None:
         """Start a fresh scheduling epoch (one ``serve()`` call).
@@ -679,6 +845,15 @@ class Scheduler:
         self.recoveries = 0
         self.tokens_replayed = 0
         self.recovery_ttfts: List[float] = []
+        # SLO-class overload control (per-epoch like the trace): preemption
+        # totals plus the brownout ladder and its transition event log.
+        self.preemptions = 0
+        self.preempt_tokens_replayed = 0
+        self.preempt_latencies: List[float] = []
+        self._ladder = (BrownoutLadder(self.config.brownout_patience,
+                                       self.config.brownout_cooldown)
+                        if self.config.brownout else None)
+        self.brownout_events: List[Dict[str, Any]] = []
         # RDMA-plane retry counters, synced from the KVTransferEngine by
         # the ServingSystem (the transfer engine's counters are lifetime,
         # the summary's are per-epoch deltas).
@@ -695,12 +870,12 @@ class Scheduler:
         return min(clocks) if clocks else min(self._decode_now)
 
     # -- prefill side ------------------------------------------------------
-    def on_arrival(self, rid: int, arrival: float,
-                   prompt_tokens: int) -> RequestTrace:
+    def on_arrival(self, rid: int, arrival: float, prompt_tokens: int,
+                   slo_class: str = "interactive") -> RequestTrace:
         if rid in self.traces:
             raise ValueError(f"duplicate rid {rid}")
         tr = RequestTrace(rid=rid, arrival=arrival,
-                          prompt_tokens=prompt_tokens)
+                          prompt_tokens=prompt_tokens, slo_class=slo_class)
         self.traces[rid] = tr
         return tr
 
@@ -735,12 +910,75 @@ class Scheduler:
         trace.transfer_seconds = seconds
 
     # -- decode side -------------------------------------------------------
-    def admission_decision(self, trace: RequestTrace, engine: int = 0) -> str:
+    def admission_decision(self, trace: RequestTrace, engine: int = 0,
+                           recovered: bool = False) -> str:
         """Gate decision against one engine's batch: projected TPOT depends
         on the batch the request would *join*, which under a pool is the
-        target engine's, not the pool-wide count."""
+        target engine's, not the pool-wide count. The decision is class-
+        indexed: the strictest cap over the joining class and the classes
+        already resident on the engine applies, and the brownout ladder may
+        override the class's queue/shed mode. Recovered/preempted
+        re-admissions bypass the brownout override (never its caps): they
+        already streamed tokens, so shedding them would break replay token
+        identity — and a browned-out ladder must not deadlock on them."""
         mgr = self.slot_mgrs[engine]
-        return self.gate.decide(mgr.active, mgr.free > 0)
+        resident = {self.traces[info.rid].slo_class
+                    for _, info in mgr.active_slots()
+                    if info.rid in self.traces}
+        override = None if recovered \
+            else self.brownout_mode_override(trace.slo_class)
+        return self.gate.decide(mgr.active, mgr.free > 0, trace.slo_class,
+                                resident_classes=resident,
+                                mode_override=override)
+
+    # -- SLO-class overload control ----------------------------------------
+    @property
+    def brownout_level(self) -> int:
+        """Current brownout ladder rung (0 when brownout is off)."""
+        return self._ladder.level if self._ladder is not None else 0
+
+    def brownout_mode_override(self, slo_class: str) -> Optional[str]:
+        """Forced admission mode for a class at the current brownout level
+        (level >= 1 sheds batch admissions, level >= 4 sheds interactive
+        too), or None when the configured mode applies."""
+        lvl = self.brownout_level
+        if lvl >= 1 and slo_class == "batch":
+            return "shed"
+        if lvl >= 4 and slo_class == "interactive":
+            return "shed"
+        return None
+
+    @property
+    def preemption_enabled(self) -> bool:
+        """Batch-tier preemption is on when configured explicitly or when
+        the brownout ladder has climbed to its preemption rung."""
+        return self.config.preempt_batch or self.brownout_level >= 2
+
+    def note_overload(self, pressured: bool) -> None:
+        """Feed the brownout ladder one decode turn's pressure signal
+        (``pressured`` = a gate-ready interactive request is still blocked
+        after admission ran). Transitions are stamped on the virtual clock
+        and recorded as trace events."""
+        if self._ladder is None:
+            return
+        ev = self._ladder.observe(pressured)
+        if ev is not None:
+            self.brownout_events.append(
+                {"t": self.decode_now, "from": ev["from"], "to": ev["to"]})
+
+    def on_preempt(self, trace: RequestTrace, at: float,
+                   tokens_replayed: int, ready_at: float) -> None:
+        """A batch-tier request was evicted mid-decode for interactive
+        pressure and rebuilt by replay re-prefill; it re-enters the
+        admission queue at ``ready_at``. The latency is charged to the
+        trace (``preempt_seconds``), separate from decode/recovery time —
+        TPOT keeps meaning pure decode residency."""
+        dt = ready_at - at
+        trace.preemptions += 1
+        trace.preempt_seconds += dt
+        self.preemptions += 1
+        self.preempt_tokens_replayed += tokens_replayed
+        self.preempt_latencies.append(dt)
 
     def on_admit(self, trace: RequestTrace, slot: int, engine: int = 0) -> None:
         trace.decode_admit = max(self._decode_now[engine], trace.ready_at)
@@ -990,7 +1228,9 @@ class Scheduler:
         new_cost = dataclasses.replace(self.cost, mtp_accept=accept)
         try:
             gate = AdmissionGate(new_cost, self.gate.budget_s,
-                                 self.config.admission)
+                                 self.config.admission,
+                                 class_budgets=self._class_budgets(),
+                                 class_modes=self._class_modes())
         except ValueError:
             return None
         self.cost, self.gate = new_cost, gate
@@ -1042,6 +1282,21 @@ class Scheduler:
         s["retries"] = self.transfer_retries
         s["transfer_timeouts"] = self.transfer_timeouts
         s["transfer_corruptions"] = self.transfer_corruptions
+        # SLO-class overload control metrics: unconditional zeros, like the
+        # fault metrics — "no preemptions" is an assertion, not missing data.
+        s["preemptions"] = self.preemptions
+        s["preempt_tokens_replayed"] = self.preempt_tokens_replayed
+        if self.preempt_latencies:
+            s["preempt_p50_s"] = SLOTracker._pct(self.preempt_latencies, 50)
+            s["preempt_p99_s"] = SLOTracker._pct(self.preempt_latencies, 99)
+        if self.config.brownout:
+            s["brownout_level"] = self.brownout_level
+            s["brownout_transitions"] = len(self.brownout_events)
+            s["brownout_peak_level"] = max(
+                (e["to"] for e in self.brownout_events), default=0)
+            s["brownout_timeline"] = [
+                [round(e["t"], 9), e["from"], e["to"]]
+                for e in self.brownout_events]
         if self.recovery_ttfts:
             s["recovery_ttft_p50_s"] = SLOTracker._pct(self.recovery_ttfts, 50)
             s["recovery_ttft_p99_s"] = SLOTracker._pct(self.recovery_ttfts, 99)

@@ -20,6 +20,12 @@ def pytest_configure(config):
         "fault_soak: deterministic fault-injection soak over the pool/"
         "injector state machines (fast by default; FAULT_SOAK_ITERS=1000000 "
         "runs the full million-iteration virtual-clock soak)")
+    config.addinivalue_line(
+        "markers",
+        "workload_soak: production workload suite soak through the real "
+        "scheduler control plane (fast by default; "
+        "WORKLOAD_SOAK_REQUESTS=1000000 runs the full million-request "
+        "virtual-clock soak)")
 
 
 @pytest.fixture(scope="session")

@@ -276,7 +276,8 @@ def test_admit_with_no_free_slot_requeues_instead_of_crashing(qwen):
     prompts = [list(rng.randint(0, 200, 10)) for _ in range(3)]
     system = ServingSystem(params, cfg, n_prefill=1, decode_batch=1,
                            capacity=24)
-    system.scheduler.gate.decide = lambda active, has_free_slot: "admit"
+    system.scheduler.gate.decide = (lambda active, has_free_slot,
+                                *a, **k: "admit")
     results = system.serve([Request(i, p, 4) for i, p in enumerate(prompts)])
     assert len(results) == 3
     for r in results:

@@ -1,0 +1,346 @@
+"""SLO-class overload control: class-indexed admission gate, strict-priority
+ordering, class-ordered graceful degradation, the brownout ladder, per-class
+SLO summaries, and the production workload generators."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke
+from repro.models import init_params
+from repro.serving import (AdmissionGate, BrownoutLadder, DecodeCostModel,
+                           Request, RequestTrace, ServingSystem, SLOTracker,
+                           multi_turn_sessions, poisson_requests,
+                           production_requests)
+
+COST = DecodeCostModel()          # fixed 4 ms + 1 ms/req -> 6 ms budget = B2
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = smoke("granite-3-2b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# Class-indexed AdmissionGate
+# ---------------------------------------------------------------------------
+
+
+def test_default_gate_is_class_blind_back_compat():
+    """Two-argument construction is exactly the pre-class gate: every class
+    sees the base budget/mode and decide() is unchanged."""
+    gate = AdmissionGate(COST, 6e-3)
+    assert gate.max_batch == 2
+    assert gate.cap_for() == gate.cap_for("batch") == 2
+    assert gate.mode_for() == gate.mode_for("batch") == "queue"
+    assert gate.decide(1, True) == "admit"
+    assert gate.decide(2, True) == "wait"
+    assert gate.decide(2, False) == "wait"
+
+
+def test_class_budgets_give_per_class_caps_and_modes():
+    gate = AdmissionGate(COST, 6e-3,
+                         class_budgets={"batch": 30e-3},
+                         class_modes={"batch": "shed"})
+    assert gate.cap_for("interactive") == 2
+    assert gate.cap_for("batch") == COST.max_batch_for(30e-3)
+    assert gate.cap_for("batch") > 2
+    assert gate.mode_for("interactive") == "queue"
+    assert gate.mode_for("batch") == "shed"
+    # Unknown classes fall back to the base budget/mode.
+    assert gate.cap_for("bulk") == 2 and gate.mode_for("bulk") == "queue"
+
+
+def test_effective_cap_is_strictest_over_resident_classes():
+    """Batch step time is a whole-batch property: a relaxed-budget batch
+    request may not inflate the batch past a co-resident interactive
+    request's cap."""
+    gate = AdmissionGate(COST, 6e-3, class_budgets={"batch": 30e-3})
+    # Batch joining a batch-only engine: relaxed cap applies.
+    assert gate.admissible(2, "batch", resident_classes=("batch",))
+    # Batch joining an engine holding an interactive request: the
+    # interactive 2-cap wins.
+    assert not gate.admissible(2, "batch",
+                               resident_classes=("interactive",))
+    assert gate.decide(2, True, "batch",
+                       resident_classes=("interactive",)) == "wait"
+    # Interactive joining anywhere is capped by its own budget.
+    assert not gate.admissible(2, "interactive", resident_classes=("batch",))
+
+
+def test_class_mode_and_zero_cap_validation():
+    with pytest.raises(ValueError, match="queue|shed"):
+        AdmissionGate(COST, 6e-3, class_modes={"batch": "drop"})
+    # A class budget below the fixed decode cost admits nothing: queue mode
+    # would deadlock, so construction must fail just like the base budget.
+    with pytest.raises(ValueError, match="below the fixed decode cost"):
+        AdmissionGate(COST, 6e-3, class_budgets={"batch": 1e-3})
+    # shed mode makes the zero cap legal (reject-all tier).
+    gate = AdmissionGate(COST, 6e-3, class_budgets={"batch": 1e-3},
+                         class_modes={"batch": "shed"})
+    assert gate.cap_for("batch") == 0
+    assert gate.decide(0, True, "batch") == "shed"
+
+
+def test_mode_override_sheds_before_slot_check():
+    """A brownout shed-override rejects the class outright — even with a
+    free slot and an admissible batch, and without widening admissibility
+    for anyone else."""
+    gate = AdmissionGate(COST, 6e-3)
+    assert gate.decide(0, True, "batch", mode_override="shed") == "shed"
+    assert gate.decide(0, False, "batch", mode_override="shed") == "shed"
+    assert gate.decide(2, True, "interactive", mode_override="queue") == "wait"
+
+
+# ---------------------------------------------------------------------------
+# Brownout ladder
+# ---------------------------------------------------------------------------
+
+
+def test_brownout_ladder_hysteresis_and_bounds():
+    lad = BrownoutLadder(patience=2, cooldown=3)
+    assert lad.observe(True) is None                    # 1 pressured turn
+    assert lad.observe(True) == {"from": 0, "to": 1}    # patience reached
+    assert lad.level == 1
+    # Calm turns reset the pressure streak; cooldown steps back down.
+    assert lad.observe(False) is None
+    assert lad.observe(True) is None                    # streak restarted
+    assert lad.observe(True) == {"from": 1, "to": 2}
+    for _ in range(2):
+        assert lad.observe(False) is None
+    assert lad.observe(False) == {"from": 2, "to": 1}
+    # Level never leaves [0, MAX_LEVEL].
+    for _ in range(20):
+        lad.observe(True)
+    assert lad.level == BrownoutLadder.MAX_LEVEL == 4
+    for _ in range(40):
+        lad.observe(False)
+    assert lad.level == 0
+    assert lad.observe(False) is None                   # floor holds
+
+
+def test_brownout_ladder_validation():
+    with pytest.raises(ValueError, match="patience/cooldown"):
+        BrownoutLadder(patience=0)
+    with pytest.raises(ValueError, match="patience/cooldown"):
+        BrownoutLadder(cooldown=0)
+
+
+# ---------------------------------------------------------------------------
+# Per-class SLO summaries
+# ---------------------------------------------------------------------------
+
+
+def _trace(rid, slo_class, shed=False):
+    tr = RequestTrace(rid, arrival=0.0, prompt_tokens=4, slo_class=slo_class,
+                      prefill_end=1e-3, decode_admit=2e-3, decode_end=5e-3,
+                      decode_iters=3, decode_tokens=3, decode_seconds=3e-3,
+                      tokens_out=4)
+    tr.shed = shed
+    return tr
+
+
+def test_slo_tracker_per_class_breakdown():
+    trk = SLOTracker()
+    for t in (_trace(0, "interactive"), _trace(1, "batch"),
+              _trace(2, "batch", shed=True)):
+        trk.record(t)
+    s = trk.summary()
+    assert s["completed"] == 2 and s["shed"] == 1
+    cls = s["classes"]
+    assert set(cls) == {"batch", "interactive"}
+    assert cls["interactive"]["completed"] == 1
+    assert cls["batch"]["completed"] == 1 and cls["batch"]["shed"] == 1
+
+
+def test_slo_tracker_single_class_summary_stays_flat():
+    trk = SLOTracker()
+    trk.record(_trace(0, "interactive"))
+    assert "classes" not in trk.summary()
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_requests_rejects_degenerate_lengths():
+    kw = dict(rate_rps=100.0, vocab_size=64, seed=0)
+    with pytest.raises(ValueError, match="prompt_len must be positive"):
+        poisson_requests(4, prompt_len=0, max_new=4, **kw)
+    with pytest.raises(ValueError, match="max_new must be positive"):
+        poisson_requests(4, prompt_len=8, max_new=0, **kw)
+    # Existing guards still fire.
+    with pytest.raises(ValueError, match="n_requests"):
+        poisson_requests(0, prompt_len=8, max_new=4, **kw)
+    with pytest.raises(ValueError, match="rate_rps"):
+        poisson_requests(4, rate_rps=0.0, prompt_len=8, max_new=4,
+                         vocab_size=64, seed=0)
+
+
+def test_poisson_requests_class_and_rid_base():
+    reqs = poisson_requests(3, 100.0, 8, 4, 64, seed=1, slo_class="batch",
+                            rid_base=50, start=2.0)
+    assert [r.rid for r in reqs] == [50, 51, 52]
+    assert all(r.slo_class == "batch" for r in reqs)
+    assert all(r.arrival > 2.0 for r in reqs)
+
+
+@pytest.mark.parametrize("shape", ["poisson", "burst", "diurnal"])
+def test_production_requests_deterministic_and_shaped(shape):
+    kw = dict(seed=9, vocab_size=64, rate_rps=200.0, arrival_shape=shape,
+              interactive_frac=0.6)
+    a = production_requests(64, **kw)
+    b = production_requests(64, **kw)
+    assert [(r.rid, r.arrival, r.prompt, r.max_new_tokens, r.slo_class)
+            for r in a] == \
+           [(r.rid, r.arrival, r.prompt, r.max_new_tokens, r.slo_class)
+            for r in b]
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals) and arrivals[0] > 0
+    assert {r.slo_class for r in a} == {"interactive", "batch"}
+    assert all(1 <= len(r.prompt) <= 256 and 1 <= r.max_new_tokens <= 64
+               for r in a)
+    # Heavy tail: lengths actually vary.
+    assert len({len(r.prompt) for r in a}) > 4
+
+
+def test_production_requests_validation_and_chunking():
+    with pytest.raises(ValueError, match="arrival shape"):
+        production_requests(4, seed=0, vocab_size=64, rate_rps=10.0,
+                            arrival_shape="flat")
+    with pytest.raises(ValueError, match="interactive_frac"):
+        production_requests(4, seed=0, vocab_size=64, rate_rps=10.0,
+                            interactive_frac=1.5)
+    # Chunked generation: disjoint rid ranges and non-overlapping time.
+    c0 = production_requests(8, seed=0, vocab_size=64, rate_rps=100.0)
+    c1 = production_requests(8, seed=1, vocab_size=64, rate_rps=100.0,
+                             start=c0[-1].arrival, rid_base=8)
+    assert {r.rid for r in c0}.isdisjoint({r.rid for r in c1})
+    assert min(r.arrival for r in c1) > max(r.arrival for r in c0)
+
+
+def test_multi_turn_sessions_grow_prefixes_deterministically():
+    a = multi_turn_sessions(4, seed=3, vocab_size=64, session_rate_rps=50.0,
+                            turns=3)
+    b = multi_turn_sessions(4, seed=3, vocab_size=64, session_rate_rps=50.0,
+                            turns=3)
+    assert [(r.rid, r.arrival, r.prompt) for r in a] == \
+           [(r.rid, r.arrival, r.prompt) for r in b]
+    assert len(a) == 12
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals)
+    # Each session's later turns re-enter with a strictly grown prefix that
+    # starts with the previous turn's full prompt (EMS prefix reuse).
+    by_rid = {r.rid: r for r in a}
+    for s in range(4):
+        t0, t1, t2 = (by_rid[3 * s], by_rid[3 * s + 1], by_rid[3 * s + 2])
+        assert len(t0.prompt) < len(t1.prompt) < len(t2.prompt)
+        assert t1.prompt[:len(t0.prompt)] == t0.prompt
+        assert t2.prompt[:len(t1.prompt)] == t1.prompt
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: strict priority, class-ordered degrade, brownout
+# ---------------------------------------------------------------------------
+
+
+def _mixed_requests(seed=11, n_batch=6, n_interactive=3):
+    rng = np.random.RandomState(seed)
+    reqs = [Request(i, list(rng.randint(0, 100, 12)), 6,
+                    arrival=5e-4 * i, slo_class="batch")
+            for i in range(n_batch)]
+    reqs += [Request(100 + i, list(rng.randint(0, 100, 12)), 4,
+                     arrival=4e-3 + 2e-3 * i, slo_class="interactive")
+             for i in range(n_interactive)]
+    return reqs
+
+
+def test_strict_priority_batch_never_delays_ready_interactive(granite):
+    """Once an interactive request is KV-ready, no batch-tier request is
+    admitted ahead of it — with per-class budgets, the earlier-arrived
+    batch flood queues behind the interactive trickle."""
+    cfg, params = granite
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=3,
+                           capacity=64, tpot_budget_ms=6.0,
+                           batch_tpot_budget_ms=30.0)
+    results = system.serve(_mixed_requests(), open_loop=True)
+    sched = system.scheduler
+    assert len(results) == 9 and not any(r.shed for r in results)
+    inter = [t for t in sched.traces.values() if t.slo_class == "interactive"]
+    batch = [t for t in sched.traces.values() if t.slo_class == "batch"]
+    eps = 1e-12
+    for it in inter:
+        for bt in batch:
+            # A batch request admitted after this interactive became ready
+            # must not have been admitted before the interactive was.
+            if bt.decode_admit > it.ready_at + eps:
+                assert bt.decode_admit >= it.decode_admit - eps
+    s = sched.summary()
+    assert s["classes"]["interactive"]["completed"] == 3
+    assert s["classes"]["batch"]["completed"] == 6
+
+
+def test_degrade_shed_is_class_ordered_at_equal_queue_age(granite):
+    """degrade_shed_queue_s composes with class ordering: at equal queue
+    age the batch-tier backlog is shed before any interactive request, and
+    shed traces stamp their queue time at the shed instant."""
+    cfg, params = granite
+    rng = np.random.RandomState(5)
+    # Interleaved equal-age backlog: all arrive at once, classes alternate.
+    reqs = [Request(i, list(rng.randint(0, 100, 12)), 6,
+                    slo_class=("batch" if i % 2 == 0 else "interactive"))
+            for i in range(8)]
+    system = ServingSystem(params, cfg, n_prefill=1, decode_batch=2,
+                           capacity=32, degrade_shed_queue_s=1e-4)
+    results = system.serve(reqs)
+    sched = system.scheduler
+    s = sched.summary()
+    assert s["shed"] >= 1 and s["completed"] + s["shed"] == len(reqs)
+    shed_batch = [t for t in sched.tracker.shed if t.slo_class == "batch"]
+    shed_inter = [t for t in sched.tracker.shed
+                  if t.slo_class == "interactive"]
+    assert shed_batch, "equal-age shedding must cut the batch tier"
+    # Class ordering: every interactive shed (if any) happens in a later
+    # round than every batch shed.
+    if shed_inter:
+        assert max(t.decode_admit for t in shed_batch) <= \
+            min(t.decode_admit for t in shed_inter)
+    # Shed traces stamp queue time at the shed instant.
+    for t in sched.tracker.shed:
+        assert t.decode_admit == t.decode_end >= t.ready_at
+        assert t.queue_seconds > 0
+    assert sum(r.shed for r in results) == s["shed"]
+
+
+def test_brownout_ladder_sheds_batch_under_sustained_pressure(granite):
+    """Under a sustained interactive backlog the ladder climbs off level 0
+    and brownout-sheds batch admissions that plain class budgets would have
+    queued; transitions land in the summary timeline."""
+    cfg, params = granite
+    rng = np.random.RandomState(17)
+    reqs = [Request(i, list(rng.randint(0, 100, 12)), 6,
+                    arrival=3e-4 * i, slo_class="interactive")
+            for i in range(8)]
+    reqs += [Request(100 + i, list(rng.randint(0, 100, 12)), 4,
+                     arrival=2e-3 + 2e-3 * i, slo_class="batch")
+             for i in range(4)]
+    system = ServingSystem(params, cfg, n_prefill=2, decode_batch=2,
+                           capacity=64, tpot_budget_ms=6.0,
+                           batch_tpot_budget_ms=30.0, brownout=True,
+                           brownout_patience=4)
+    results = system.serve(reqs, open_loop=True)
+    sched = system.scheduler
+    s = sched.summary()
+    assert s["brownout_peak_level"] >= 1
+    assert s["brownout_transitions"] >= 1
+    assert s["brownout_timeline"], "transitions must be trace events"
+    for t, frm, to in s["brownout_timeline"]:
+        assert 0 <= frm <= 4 and 0 <= to <= 4 and abs(frm - to) == 1
+    # Every interactive request completes; the browned-out batch tier is
+    # what pays (shed by the ladder despite its queue-mode config).
+    assert s["classes"]["interactive"]["completed"] == 8
+    assert s["classes"]["interactive"]["shed"] == 0
+    assert s["classes"]["batch"]["shed"] >= 1
+    assert len(results) == len(reqs)
