@@ -40,6 +40,10 @@ bench-slo:
 # section (interactive TPOT p99 held with class-aware control / violated
 # without on the identical burst, >= 1 mid-decode batch preemption, and
 # preempted-then-resumed tokens bit-identical to the uncontended run).
+# The prefill artifact is schema 8: the handoff_overlap section (pipelined
+# chunked KV streaming strictly lowers virtual-clock TTFT vs the
+# synchronous whole-request handoff, hides transfer time behind prefill,
+# and stays token-identical).
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_mtp --smoke
@@ -94,5 +98,25 @@ bench-check:
 	f\"{sc['interactive_tpot_p99_ms_uncontrolled']:.1f}ms blind, \" \
 	f\"{sc['preemptions']} preemptions, \" \
 	f\"brownout peak L{sc['brownout_peak_level']}\")"
+	$(PY) -c "import json; p = json.load(open('BENCH_prefill.json')); \
+	assert p['schema'] == 8, f'BENCH_prefill.json schema {p[\"schema\"]} != 8'; \
+	h = p['handoff_overlap']; \
+	assert h['tokens_identical'] is True, \
+	'streamed handoff tokens diverged from the synchronous path'; \
+	assert h['streamed_ttft_p50_s'] < h['sync_ttft_p50_s'], \
+	'pipelined streaming did not lower median TTFT vs synchronous'; \
+	assert h['streamed_ttft_mean_s'] < h['sync_ttft_mean_s'], \
+	'pipelined streaming did not lower mean TTFT vs synchronous'; \
+	assert h['overlap_hidden_s'] > 0, 'no transfer time was hidden'; \
+	assert h['stream_chunks'] > h['requests'], \
+	'streaming did not actually chunk the handoff'; \
+	assert h['stream_bytes'] > 0 and h['max_chunk_bytes_in_flight'] > 0, \
+	'transfer-bytes-in-flight accounting missing'; \
+	print('BENCH_prefill.json schema 8 OK:', \
+	f\"streamed TTFT p50 {h['streamed_ttft_p50_s']*1e3:.3f}ms < \" \
+	f\"sync {h['sync_ttft_p50_s']*1e3:.3f}ms, \" \
+	f\"{h['overlap_hidden_s']*1e3:.3f}ms hidden over \" \
+	f\"{h['stream_chunks']} chunks, \" \
+	f\"max {h['max_chunk_bytes_in_flight']} B in flight\")"
 
 ci: smoke test bench-smoke bench-check

@@ -108,6 +108,8 @@ def _live_rows() -> None:
          f"{len(eng_c.continue_widths)}_programs_over_"
          f"{eng_c.continue_calls}_dispatches")
 
+    handoff = _handoff_overlap_section()
+
     artifact = {
         "config": {"arch": LIVE_ARCH, "prompt_len": LIVE_PROMPT,
                    "shared_prefix": LIVE_SHARED, "requests": LIVE_REQS,
@@ -126,12 +128,59 @@ def _live_rows() -> None:
             "compiled_widths": sorted(eng_c.continue_widths),
             "dispatches": eng_c.continue_calls,
         },
+        "handoff_overlap": handoff,
         "tpot_p50_ms": None,               # prefill-side bench: no decode
         "tpot_p99_ms": None,
         "decode_chunk": None,
     }
-    path = write_bench_artifact("prefill", artifact)
+    path = write_bench_artifact("prefill", artifact, schema=8)
     emit("prefill_tput", "artifact", path, "")
+
+
+def _handoff_overlap_section() -> dict:
+    """Pipelined chunked KV streaming vs the synchronous whole-request
+    handoff on the identical open-loop burst: virtual-clock TTFT split
+    (streamed must be strictly lower — the transfer is hidden behind the
+    remaining prefill compute except the last chunk's wire time), bytes in
+    flight, and emitted-token identity. The section is asserted by
+    ``make bench-check``."""
+    import numpy as np
+
+    from benchmarks.common import STREAM_CHUNK, live_stream_serve
+
+    sync_res, sync_sched = live_stream_serve(streamed=False)
+    sync_ttft = {r.rid: sync_sched.traces[r.rid].ttft
+                 for r in sync_res if not r.shed}
+    sync_tokens = {r.rid: list(r.tokens) for r in sync_res}
+    strm_res, strm_sched = live_stream_serve(streamed=True)
+    strm_ttft = {r.rid: strm_sched.traces[r.rid].ttft
+                 for r in strm_res if not r.shed}
+    strm_tokens = {r.rid: list(r.tokens) for r in strm_res}
+    s = strm_sched.summary()
+    identical = sync_tokens == strm_tokens
+    sync_vals = [sync_ttft[r] for r in sorted(sync_ttft)]
+    strm_vals = [strm_ttft[r] for r in sorted(strm_ttft)]
+    emit("prefill_tput", "handoff_streamed_ttft_p50_ms",
+         round(float(np.percentile(strm_vals, 50)) * 1e3, 4),
+         f"sync_p50_ms={float(np.percentile(sync_vals, 50))*1e3:.4f}")
+    emit("prefill_tput", "handoff_overlap_hidden_ms",
+         round(s["stream_overlap_s"] * 1e3, 4),
+         f"chunks={s['stream_chunks']};tokens_identical={identical}")
+    return {
+        "stream_chunk": STREAM_CHUNK,
+        "requests": len(strm_vals),
+        "streamed_ttft_p50_s": float(np.percentile(strm_vals, 50)),
+        "streamed_ttft_p99_s": float(np.percentile(strm_vals, 99)),
+        "sync_ttft_p50_s": float(np.percentile(sync_vals, 50)),
+        "sync_ttft_p99_s": float(np.percentile(sync_vals, 99)),
+        "streamed_ttft_mean_s": float(np.mean(strm_vals)),
+        "sync_ttft_mean_s": float(np.mean(sync_vals)),
+        "overlap_hidden_s": s["stream_overlap_s"],
+        "stream_chunks": s["stream_chunks"],
+        "stream_bytes": s["stream_bytes"],
+        "max_chunk_bytes_in_flight": s["stream_max_chunk_bytes"],
+        "tokens_identical": identical,
+    }
 
 
 if __name__ == "__main__":

@@ -195,6 +195,34 @@ def autoscale_rows() -> None:
                  "max_trace_tpot<=budget across spawned engines")
 
 
+def joint_rows() -> None:
+    """Joint P/D autoscaling on the canonical phase-skewed burst: the
+    prefill-heavy opening must pull an engine decode->prefill (shift_d2p),
+    the decode-heavy tail must push it back (shift_p2d), and the served
+    tokens must match a fixed-roster reference on the identical stream —
+    the capacity see-saw is pure scheduling, never a token change."""
+    from benchmarks.common import live_joint_serve
+
+    ref_res, _, _ = live_joint_serve(joint=False)
+    res, scheduler, system = live_joint_serve(joint=True)
+    s = scheduler.summary()
+    ref_tokens = {r.rid: list(r.tokens) for r in ref_res}
+    tokens = {r.rid: list(r.tokens) for r in res}
+    timeline = s.get("prefill_count_timeline", [])
+    emit("tpot_slo", "joint_shifts",
+         f"{s.get('shifts_d2p', 0)}d2p/{s.get('shifts_p2d', 0)}p2d",
+         f"tokens_identical={tokens == ref_tokens};"
+         f"completed={s['completed']}")
+    emit("tpot_slo", "joint_prefill_count_timeline",
+         "|".join(f"{n}@{t*1e3:.1f}ms" for t, n in timeline),
+         f"final_prefill_live={system.prefill_pool.n_live};"
+         f"final_decode_live={system.pool.n_live}")
+    emit("tpot_slo", "joint_engine_count_timeline",
+         "|".join(f"{n}@{t*1e3:.1f}ms"
+                  for t, n in s.get("engine_count_timeline", [])),
+         "decode-side view of the same shift events")
+
+
 def fault_rows() -> None:
     """Fault-tolerant serving under the canonical fault plan: SLO impact of
     a mid-decode engine crash (recovery-TTFT percentiles, the latency the
@@ -283,6 +311,7 @@ def main() -> None:
     open_loop_rows()
     pool_rows()
     autoscale_rows()
+    joint_rows()
     fault_rows()
     slo_class_rows()
 

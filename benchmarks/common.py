@@ -78,7 +78,10 @@ def write_bench_artifact(name: str, payload: Dict, schema: int = 7) -> str:
     token identity of the faulted run against its fault-free reference);
     schema 7 adds the slo_classes section (per-class TPOT under a mixed
     overload burst with vs without class-aware control, batch preemption
-    counts, preempt-resume token identity, brownout transitions)."""
+    counts, preempt-resume token identity, brownout transitions); schema 8
+    (prefill artifact) adds the handoff_overlap section (streamed vs
+    synchronous TTFT split under pipelined chunked KV streaming, transfer
+    bytes in flight, token identity of the two paths)."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump({"schema": schema, "bench": name, **payload}, f, indent=1,
@@ -485,6 +488,96 @@ def live_overload_serve(*, class_aware: bool, brownout: bool = False,
     system = ServingSystem(
         params, cfg, n_prefill=2, decode_batch=decode_batch,
         capacity=LIVE_PROMPT_LEN + OVERLOAD_MAX_NEW + 16, **kw)
+    results = system.serve(reqs, open_loop=True)
+    return results, system.scheduler, system
+
+
+STREAM_CHUNK = 4          # streamed-handoff chunk width for the bench
+STREAM_PROMPT_LEN = 24    # long enough for several chunks per request
+STREAM_RATE_RPS = 500.0
+
+
+def stream_burst(n_requests: int = 10, seed: int = 11):
+    """The canonical pipelined-handoff bench burst: one definition shared
+    by the streamed and synchronous runs, so the TTFT split and the
+    token-identity check provably compare the same stream."""
+    from repro.serving.workload import poisson_requests
+
+    cfg, _ = live_model()
+    return poisson_requests(n_requests, STREAM_RATE_RPS, STREAM_PROMPT_LEN,
+                            LIVE_MAX_NEW, cfg.vocab_size, seed=seed)
+
+
+def live_stream_serve(*, streamed: bool, requests=None,
+                      stream_chunk: int = STREAM_CHUNK,
+                      decode_batch: int = 4):
+    """Open-loop burst (default: :func:`stream_burst`) with the KV handoff
+    either synchronous (whole-request, on the TTFT critical path) or
+    pipelined (chunked streaming overlapped behind prefill compute);
+    returns (results, scheduler). ``stream_handoff`` is control-plane, so
+    both runs share one cached compiled system and flip the handoff mode
+    via ``reconfigure_scheduler`` — the decode path is bit-identical by
+    construction of the comparison, and the bench asserts it."""
+    from repro.serving import SchedulerConfig, ServingSystem
+
+    cfg, params = live_model()
+    reqs = stream_burst() if requests is None else requests
+    key = ("stream", decode_batch)
+    system = _live_systems.get(key)
+    if system is None:
+        system = ServingSystem(
+            params, cfg, n_prefill=2, decode_batch=decode_batch,
+            capacity=STREAM_PROMPT_LEN + LIVE_MAX_NEW + 16)
+        _live_systems[key] = system
+    system.reconfigure_scheduler(
+        SchedulerConfig(stream_handoff=streamed, stream_chunk=stream_chunk,
+                        decode_cost=calibrated_decode_cost(LIVE_ARCH)))
+    results = system.serve(reqs, open_loop=True)
+    return results, system.scheduler
+
+
+JOINT_TTFT_BUDGET_MS = 2.0
+JOINT_TPOT_BUDGET_MS = 6.0
+
+
+def joint_burst(seed: int = 3):
+    """The canonical phase-skewed joint-autoscale burst: a prefill-heavy
+    opening phase (long prompts, 2-token generations, tight arrivals)
+    followed by a decode-heavy phase (short prompts, long generations), so
+    a correct joint controller must shift an engine decode->prefill and
+    then back."""
+    import numpy as np
+
+    from repro.serving import Request
+
+    cfg, _ = live_model()
+    rng = np.random.RandomState(seed)
+    reqs = [Request(i, list(rng.randint(0, cfg.vocab_size, 48)), 2,
+                    arrival=5e-4 * i) for i in range(8)]
+    reqs += [Request(100 + i, list(rng.randint(0, cfg.vocab_size, 6)), 24,
+                     arrival=0.15 + 2e-4 * i) for i in range(8)]
+    return reqs
+
+
+def live_joint_serve(*, joint: bool = True, requests=None,
+                     decode_batch: int = 2):
+    """The phase-skewed burst through a joint P/D-autoscaling system
+    (1 prefill + 2 decode engines initially, clamps 1..3 per role);
+    returns (results, scheduler, system). ``joint=False`` serves the
+    identical stream with the roster fixed — the token-identity reference.
+    Not cached: the controller mutates both engine rosters."""
+    from repro.serving import SchedulerConfig, ServingSystem
+
+    cfg, params = live_model()
+    reqs = joint_burst() if requests is None else requests
+    kw = dict(joint_autoscale=True, min_prefill=1, max_prefill=3,
+              min_engines=1, max_engines=3,
+              ttft_budget_ms=JOINT_TTFT_BUDGET_MS,
+              tpot_budget_ms=JOINT_TPOT_BUDGET_MS,
+              admission="queue") if joint else {}
+    system = ServingSystem(
+        params, cfg, prefill_engines=1, decode_batch=decode_batch,
+        capacity=96, decode_engines=2, **kw)
     results = system.serve(reqs, open_loop=True)
     return results, system.scheduler, system
 

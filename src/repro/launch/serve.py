@@ -7,6 +7,9 @@
       [--decode-engines 2 --decode-router least_loaded_slots|round_robin|\
        cache_affinity [--rebalance-every 4]] \
       [--autoscale --min-engines 1 --max-engines 4] \
+      [--prefill-engines 2 [--stream-handoff [--stream-chunk 8]]] \
+      [--joint-autoscale --min-prefill 1 --max-prefill 4 \
+       --ttft-budget-ms 5] \
       [--tpot-budget-ms 15 --admission queue|shed] [--interleave] \
       [--batch-tpot-budget-ms 45 --batch-admission queue|shed \
        --interactive-frac 0.7 [--preempt-batch] [--brownout]] \
@@ -77,6 +80,30 @@ def main() -> None:
                     help="autoscaler lower clamp on live decode engines")
     ap.add_argument("--max-engines", type=int, default=4,
                     help="autoscaler upper clamp on live decode engines")
+    ap.add_argument("--prefill-engines", type=int, default=2,
+                    help="prefill pool size (spawn/park/retire lifecycle "
+                         "mirrors the decode pool)")
+    ap.add_argument("--joint-autoscale", action="store_true",
+                    help="shift engine capacity between the prefill and "
+                         "decode roles under one SLO budget (TTFT pressure "
+                         "grows prefill, TPOT pressure grows decode)")
+    ap.add_argument("--min-prefill", type=int, default=1,
+                    help="joint-autoscale lower clamp on live prefill "
+                         "instances")
+    ap.add_argument("--max-prefill", type=int, default=4,
+                    help="joint-autoscale upper clamp on live prefill "
+                         "instances")
+    ap.add_argument("--ttft-budget-ms", type=float, default=None,
+                    help="TTFT SLO budget (virtual ms) driving the joint "
+                         "autoscaler's prefill-pressure signal")
+    ap.add_argument("--stream-handoff", action="store_true",
+                    help="pipelined chunked KV handoff: stream each chunk's "
+                         "KV over the RDMA plane while the next chunk "
+                         "computes (TTFT charges max(prefill, transfer) + "
+                         "the last chunk's wire time; token-identical to "
+                         "the synchronous handoff)")
+    ap.add_argument("--stream-chunk", type=int, default=None,
+                    help="tokens per streamed KV chunk (default 8)")
     ap.add_argument("--seed", type=int, default=0,
                     help="PRNG seed for the synthetic request stream "
                          "(identical seed => identical trace)")
@@ -217,17 +244,28 @@ def main() -> None:
     # capacity-rejected.
     capacity = 256 + 64 + 8 if args.production \
         else args.prompt_len + args.max_new + 8
-    system = ServingSystem(params, cfg, n_prefill=2,
+    system = ServingSystem(params, cfg,
+                           prefill_engines=args.prefill_engines,
                            decode_batch=args.decode_batch,
                            capacity=capacity,
                            decode_engines=args.decode_engines,
                            decode_router=args.decode_router,
                            decode_rebalance_every=args.rebalance_every,
                            autoscale=args.autoscale or None,
-                           min_engines=args.min_engines if args.autoscale
+                           min_engines=args.min_engines
+                           if args.autoscale or args.joint_autoscale
                            else None,
-                           max_engines=args.max_engines if args.autoscale
+                           max_engines=args.max_engines
+                           if args.autoscale or args.joint_autoscale
                            else None,
+                           joint_autoscale=args.joint_autoscale or None,
+                           min_prefill=args.min_prefill
+                           if args.joint_autoscale else None,
+                           max_prefill=args.max_prefill
+                           if args.joint_autoscale else None,
+                           ttft_budget_ms=args.ttft_budget_ms,
+                           stream_handoff=args.stream_handoff or None,
+                           stream_chunk=args.stream_chunk,
                            context_cache=cc, use_mtp=args.mtp,
                            mtp_params=mtp_params, mtp_fused=args.mtp_fused,
                            policy=args.policy,
@@ -295,6 +333,25 @@ def main() -> None:
                  if sched.scale_events else "no scale events")
               + f" ({len(sched.scale_events)} events, live engines "
               f"{system.pool.n_live}/{system.pool.n})")
+    if args.joint_autoscale:
+        sched = system.scheduler
+        shifts = [e for e in sched.scale_events
+                  if e["action"].startswith("shift_")]
+        print("joint autoscale: "
+              + (" -> ".join(f"P{e['prefill_live']}/D{e['engines_live']}"
+                             f"@{e['t']*1e3:.1f}ms ({e['action']})"
+                             for e in shifts)
+                 if shifts else "no shift events")
+              + f" (prefill live {system.prefill_pool.n_live}"
+              f"/{system.prefill_pool.n}, decode live "
+              f"{system.pool.n_live}/{system.pool.n})")
+    if args.stream_handoff:
+        print(f"streamed handoff: {summary.get('stream_requests', 0)} "
+              f"requests in {summary.get('stream_chunks', 0)} chunks, "
+              f"{summary.get('stream_overlap_s', 0.0)*1e3:.2f} ms of "
+              "transfer hidden behind prefill, max "
+              f"{summary.get('stream_max_chunk_bytes', 0)/2**10:.1f} KiB "
+              "in flight per chunk")
     if args.prefill_chunk:
         calls = sum(e.continue_calls for e in system.prefills)
         widths = set().union(*(e.continue_widths for e in system.prefills))

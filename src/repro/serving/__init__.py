@@ -30,9 +30,11 @@ from repro.serving.pool import (  # noqa: F401
     DecodePool,
     DecodePoolRouter,
     DrainError,
+    JointAutoscaler,
     LeastLoadedSlotsRouter,
     PoolAutoscaler,
     PoolRoundRobinRouter,
+    PrefillPool,
     make_decode_router,
 )
 from repro.serving.workload import (  # noqa: F401
@@ -47,6 +49,7 @@ from repro.serving.transfer import (  # noqa: F401
     TransferError,
     TransferTimeout,
     connection_map,
+    live_connection_map,
     prefill_source_rank,
     transfer_balance,
 )

@@ -35,7 +35,8 @@ from repro.mempool.context_cache import ContextCache
 from repro.models import model as model_mod
 from repro.serving import cache_ops
 from repro.serving.faults import FaultInjector
-from repro.serving.pool import (DecodePool, DrainError, PoolAutoscaler,
+from repro.serving.pool import (DecodePool, DrainError, JointAutoscaler,
+                                PoolAutoscaler, PrefillPool,
                                 make_decode_router)
 from repro.serving.scheduler import (
     DecodeSlotManager,
@@ -679,9 +680,23 @@ class ServingSystem:
     pool size. Pass a full :class:`SchedulerConfig` as ``scheduler_config``
     to override cost-model constants; explicitly passed scheduling kwargs
     still win over the provided config.
+
+    Peer-to-peer PDC additions: ``prefill_engines`` sizes a
+    :class:`~repro.serving.pool.PrefillPool` (same spawn/park/retire/fail
+    lifecycle as the decode pool, routed over the live roster only);
+    ``stream_handoff=True`` replaces the synchronous whole-request KV
+    handoff with pipelined chunked streaming (``stream_chunk`` tokens per
+    RDMA op, transfer overlapped behind the remaining prefill compute,
+    token-identical to the synchronous path); ``joint_autoscale=True`` runs
+    a :class:`~repro.serving.pool.JointAutoscaler` that shifts engines
+    between the prefill and decode roles under one SLO budget
+    (``ttft_budget_ms`` + ``tpot_budget_ms``) inside the
+    ``min_prefill``/``max_prefill`` and ``min_engines``/``max_engines``
+    clamps.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_prefill: int = 2,
+                 prefill_engines: Optional[int] = None,
                  decode_batch: int = 4, capacity: int = 128,
                  decode_engines: int = 1,
                  decode_router: Optional[str] = None,
@@ -689,6 +704,12 @@ class ServingSystem:
                  autoscale: Optional[bool] = None,
                  min_engines: Optional[int] = None,
                  max_engines: Optional[int] = None,
+                 joint_autoscale: Optional[bool] = None,
+                 min_prefill: Optional[int] = None,
+                 max_prefill: Optional[int] = None,
+                 ttft_budget_ms: Optional[float] = None,
+                 stream_handoff: Optional[bool] = None,
+                 stream_chunk: Optional[int] = None,
                  context_cache: Optional[ContextCache] = None,
                  use_mtp: bool = False, mtp_params=None,
                  mtp_fused: bool = False, moe_fn=None,
@@ -719,6 +740,11 @@ class ServingSystem:
             ("decode_rebalance_every", decode_rebalance_every),
             ("autoscale", autoscale),
             ("min_engines", min_engines), ("max_engines", max_engines),
+            ("joint_autoscale", joint_autoscale),
+            ("min_prefill", min_prefill), ("max_prefill", max_prefill),
+            ("ttft_budget_ms", ttft_budget_ms),
+            ("stream_handoff", stream_handoff),
+            ("stream_chunk", stream_chunk),
             ("degrade_shed_queue_s", degrade_shed_queue_s),
             ("batch_tpot_budget_ms", batch_tpot_budget_ms),
             ("batch_admission", batch_admission),
@@ -741,9 +767,36 @@ class ServingSystem:
                 f"decode_engines={decode_engines} must start inside the "
                 f"autoscale clamp [{sched_cfg.min_engines}, "
                 f"{sched_cfg.max_engines}]")
-        self.prefills = [PrefillEngine(params, cfg, capacity, context_cache,
-                                       i, moe_fn, prefill_chunk=prefill_chunk)
-                         for i in range(n_prefill)]
+        n_prefill = prefill_engines if prefill_engines is not None \
+            else n_prefill
+        if sched_cfg.joint_autoscale:
+            if not (1 <= sched_cfg.min_prefill <= n_prefill
+                    <= sched_cfg.max_prefill):
+                raise ValueError(
+                    f"prefill_engines={n_prefill} must start inside the "
+                    f"joint-autoscale clamp [{sched_cfg.min_prefill}, "
+                    f"{sched_cfg.max_prefill}] (min_prefill >= 1)")
+            if not (sched_cfg.min_engines <= decode_engines
+                    <= sched_cfg.max_engines):
+                raise ValueError(
+                    f"decode_engines={decode_engines} must start inside the "
+                    f"joint-autoscale decode clamp [{sched_cfg.min_engines}, "
+                    f"{sched_cfg.max_engines}]")
+        if sched_cfg.stream_chunk is not None and sched_cfg.stream_chunk < 1:
+            raise ValueError("stream_chunk must be >= 1")
+        self.capacity = capacity
+
+        def prefill_factory(i: int) -> PrefillEngine:
+            # The joint controller's prefill grow path: an engine identical
+            # to the roster's, numbered by its instance id.
+            return PrefillEngine(params, cfg, capacity, context_cache,
+                                 i, moe_fn, prefill_chunk=prefill_chunk)
+
+        self.prefill_pool = PrefillPool(
+            [prefill_factory(i) for i in range(n_prefill)],
+            engine_factory=prefill_factory)
+        # Shared list: pool growth is immediately visible to the serve loop.
+        self.prefills = self.prefill_pool.engines
 
         def engine_factory(seed: int) -> DecodeEngine:
             # The autoscaler's grow path: a fresh engine identical to the
@@ -765,7 +818,8 @@ class ServingSystem:
         self.transfer = KVTransferEngine(
             fault_hook=None if self.faults is None
             else self.faults.transfer_fault)
-        self.scheduler = Scheduler(n_prefill, self.pool.slot_mgrs, sched_cfg)
+        self.scheduler = Scheduler(self.prefill_pool.n, self.pool.slot_mgrs,
+                                   sched_cfg)
         # In-flight registry: rid -> original Request, kept from KV handoff
         # until decode finish/shed. Engine-failure recovery needs the
         # prompt and token budget to rebuild a crashed slot by replay
@@ -802,13 +856,16 @@ class ServingSystem:
             # (a fresh policy instance — affinity/cursor state resets).
             self.pool.router = make_decode_router(new.decode_policy,
                                                   self.pool.n)
-        self.scheduler = Scheduler(len(self.prefills), self.pool.slot_mgrs,
+        self.scheduler = Scheduler(self.prefill_pool.n, self.pool.slot_mgrs,
                                    scheduler_config)
-        # Engine liveness is pool state: carry parked engines into the
-        # fresh scheduler's views.
+        # Engine liveness is pool state: carry parked engines (both roles)
+        # into the fresh scheduler's views.
         for e, live in enumerate(self.pool.live_mask):
             if not live:
                 self.scheduler.set_engine_live(e, False)
+        for i, live in enumerate(self.prefill_pool.live_mask):
+            if not live:
+                self.scheduler.set_prefill_live(i, False)
 
     def migrate_request(self, rid: int, dst_engine: int) -> float:
         """Force a cross-engine KV migration of an in-flight request (the
@@ -879,7 +936,10 @@ class ServingSystem:
                 f"({len(emitted)} emitted, {remaining} remaining) — a live "
                 "slot always holds >= 1 token and wants >= 1 more")
         replay = list(req.prompt) + emitted[:-1]
-        first, caches, rres = self.prefills[0].run(
+        # Replay runs on a live prefill instance — with a pooled roster the
+        # original instance 0 may be parked by the joint controller.
+        live = self.prefill_pool.live_ids
+        first, caches, rres = self.prefills[live[0] if live else 0].run(
             Request(rid, replay, 1, arrival=at))
         if first != emitted[-1]:
             raise RuntimeError(
@@ -895,7 +955,7 @@ class ServingSystem:
         tdt = 0.0
         while True:
             try:
-                tdt += self.transfer.transfer(caches)
+                tdt += self.transfer.transfer(caches, rid=rid)
                 break
             except TransferError as exc:
                 tdt += exc.seconds
@@ -999,6 +1059,155 @@ class ServingSystem:
             sched.record_scale_event("shrink", victim)
         return []
 
+    def _make_joint(self) -> Optional[JointAutoscaler]:
+        """One joint P/D controller per serve() wave (same rebuild rationale
+        as :meth:`_make_autoscaler`): it shifts engine capacity between the
+        prefill and decode roles under one SLO budget instead of growing
+        the cluster."""
+        cfg = self.scheduler.config
+        if not cfg.joint_autoscale:
+            return None
+        return JointAutoscaler(
+            self.scheduler.cost, self.pool.engines[0].slot_mgr.n_slots,
+            min_prefill=cfg.min_prefill, max_prefill=cfg.max_prefill,
+            min_decode=cfg.min_engines, max_decode=cfg.max_engines,
+            tpot_budget_s=self.scheduler.gate.budget_s,
+            ttft_budget_s=None if cfg.ttft_budget_ms is None
+            else cfg.ttft_budget_ms * 1e-3,
+            patience=cfg.joint_patience, cooldown=cfg.joint_cooldown)
+
+    def _joint_tick(self, joint: Optional[JointAutoscaler],
+                    queue_depth: int) -> List["_PendingAdmission"]:
+        """One joint-controller evaluation between decode turns.
+
+        ``shift_d2p`` retires the least-active decode engine (atomic
+        migration-backed drain, falling back to replay-recovery engine
+        failure exactly like the shrink path) and spawns/revives a prefill
+        instance; ``shift_p2d`` parks the least-loaded prefill instance and
+        spawns/revives a decode engine. Both directions are stamped on the
+        scale-event timeline with their role so benches can plot the
+        capacity see-saw."""
+        if joint is None:
+            return []
+        sched, pool = self.scheduler, self.pool
+        backlog = sched.prefill_backlog_s(sched.decode_now)
+        victim = min(pool.live_ids,
+                     key=lambda i: (pool.engines[i].active, -i)) \
+            if pool.live_ids else None
+        shrinkable = victim is not None and pool.n_live > 1 \
+            and pool.can_drain(victim)
+        decision = joint.decide(
+            self.prefill_pool.n_live, pool.n_live, pool.active, queue_depth,
+            backlog, decode_shrinkable=shrinkable)
+        if decision == "shift_d2p":
+            recovered: List[_PendingAdmission] = []
+            try:
+                moved = pool.retire_engine(victim, self.transfer)
+            except DrainError as exc:
+                for rid, dst, seconds in exc.moved:
+                    sched.on_migrate(sched.traces[rid], victim, dst, seconds)
+                recovered = self._fail_engine(victim)
+            else:
+                for rid, dst, seconds in moved:
+                    sched.on_migrate(sched.traces[rid], victim, dst, seconds)
+                sched.set_engine_live(victim, False)
+            inst, revived = self.prefill_pool.spawn_engine()
+            if revived:
+                sched.set_prefill_live(inst, True)
+            else:
+                sched.register_prefill_instance()
+            sched.record_scale_event("shift_d2p", victim, role="joint")
+            return recovered
+        if decision == "shift_p2d":
+            # Prefill victim: least in-flight prompt tokens; ties park the
+            # latest-spawned instance so instance 0 stays the anchor.
+            pvictim = min(self.prefill_pool.live_ids,
+                          key=lambda i: (self.prefills[i].load, -i))
+            self.prefill_pool.retire_engine(pvictim)
+            sched.set_prefill_live(pvictim, False)
+            engine, revived = pool.spawn_engine()
+            if revived:
+                sched.set_engine_live(engine, True)
+            else:
+                sched.register_engine(pool.engines[engine].slot_mgr)
+            sched.record_scale_event("shift_p2d", engine, role="joint")
+        return []
+
+    # -- pipelined KV handoff ----------------------------------------------
+    def _streamable(self) -> bool:
+        """Chunked streaming needs sliceable sequence-axis caches — the
+        same family EMS block reuse supports (ring-buffer SSM/hybrid
+        state has no per-position KV to ship incrementally)."""
+        return (self.scheduler.config.stream_handoff
+                and self.cfg.attention_kind != "none"
+                and not self.cfg.is_hybrid)
+
+    def _stream_handoff(self, req: Request, trace, res: RequestResult,
+                        caches: Any) -> Any:
+        """Pipelined chunked KV handoff: ship each chunk's KV while the
+        next chunk is still computing.
+
+        The wire carries exactly the prompt's KV rows (``pack_blocks`` full
+        chunks + a packed tail), chunk ``i`` becoming sendable when its last
+        token's prefill completes — interpolated on the virtual clock from
+        the trace's actual prefill window, so EMS-reused prefix chunks are
+        ready immediately and the final chunk lands exactly at
+        ``prefill_end``. Each chunk's transfer overlaps the remaining
+        compute; the trace is charged only the pipeline tail past
+        ``prefill_end`` (so ``ready_at = prefill_end + transfer_seconds``
+        keeps meaning "KV fully landed"), with the hidden seconds recorded
+        as ``overlap_seconds``. Returns the decode-side cache rebuilt from
+        the streamed payloads — the bytes decode consumes are the bytes
+        that crossed the wire, which is what makes streamed-vs-synchronous
+        bit-identity a real end-to-end property rather than an accounting
+        claim."""
+        sched = self.scheduler
+        cfg = self.cfg
+        chunk = sched.config.stream_chunk or 8
+        plen = len(req.prompt)
+        n_full = plen // chunk
+        segments: List[Tuple[int, int, np.ndarray]] = []
+        payloads = cache_ops.pack_blocks(cfg, caches, n_full, chunk)
+        for i, flat in enumerate(payloads):
+            segments.append((i * chunk, chunk, np.asarray(flat)))
+        tail = plen - n_full * chunk
+        if tail:
+            flat = cache_ops.pack_payload(
+                cache_ops.seq_slice(cfg, caches, n_full * chunk, tail))
+            segments.append((n_full * chunk, tail, np.asarray(flat)))
+        # Compute-availability per chunk, interpolated from the prefill
+        # window (charged per *computed* token; reused tokens are free).
+        span = trace.prefill_end - trace.prefill_start
+        per_tok = span / max(1, res.computed_tokens)
+        prev_end = -float("inf")
+        wire_total = 0.0
+        total_bytes = 0
+        max_chunk_bytes = 0
+        for ci, (start, length, flat) in enumerate(segments):
+            done = trace.prefill_start + \
+                max(0, start + length - res.reused_tokens) * per_tok
+            dt = self.transfer.transfer(flat, rid=req.rid, chunk=ci)
+            nbytes = flat.size * flat.dtype.itemsize
+            wire_total += dt
+            total_bytes += nbytes
+            max_chunk_bytes = max(max_chunk_bytes, nbytes)
+            prev_end = max(done, prev_end) + dt
+        seconds = prev_end - trace.prefill_end
+        overlap = wire_total - seconds
+        res.transfer_seconds = seconds
+        sched.on_stream_transfer(trace, seconds, len(segments), overlap,
+                                 total_bytes, max_chunk_bytes)
+        # Rebuild the decode-side cache from what actually crossed the
+        # wire. Positions past the prompt start zeroed (the synchronous
+        # path may carry padded-write garbage there); both are beyond
+        # cache_len, never attendable, and decode overwrites them.
+        rebuilt = model_mod.make_caches(cfg, 1, self.capacity, jnp.float32)
+        for start, length, flat in segments:
+            tmpl = cache_ops.seq_slice(cfg, rebuilt, start, length)
+            payload = cache_ops.unpack_payload(flat, tmpl)
+            rebuilt = cache_ops.seq_insert(cfg, rebuilt, payload, start)
+        return rebuilt
+
     def serve(self, requests: List[Request],
               open_loop: bool = False) -> List[RequestResult]:
         """Serve a request wave. ``open_loop`` drives arrival-time
@@ -1011,6 +1220,8 @@ class ServingSystem:
         sched = self.scheduler
         sched.begin_epoch()            # rids may repeat across serve() waves
         scaler = self._make_autoscaler()
+        joint = self._make_joint()
+        streaming = self._streamable()
         pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
         results: List[RequestResult] = []
         waiting: List[_PendingAdmission] = []
@@ -1245,7 +1456,8 @@ class ServingSystem:
                     results.append(res)
                     continue
                 eng = self.prefills[sched.route_prefill(
-                    trace, [e.load for e in self.prefills])]
+                    trace, [e.load for e in self.prefills],
+                    candidates=self.prefill_pool.live_ids)]
                 first, caches, res = eng.run(req)
                 res.slo_class = req.slo_class
                 sched.on_prefill_done(trace, eng.instance_id,
@@ -1260,8 +1472,12 @@ class ServingSystem:
                     sched.on_finish(trace, len(res.tokens))
                     results.append(res)
                     continue
-                res.transfer_seconds = self.transfer.transfer(caches)
-                sched.on_transfer(trace, res.transfer_seconds)
+                if streaming:
+                    caches = self._stream_handoff(req, trace, res, caches)
+                else:
+                    res.transfer_seconds = self.transfer.transfer(
+                        caches, rid=req.rid)
+                    sched.on_transfer(trace, res.transfer_seconds)
                 keys = tuple(self.cc.block_keys(req.prompt)) if affinity \
                     else ()
                 self._inflight[req.rid] = req
@@ -1327,7 +1543,7 @@ class ServingSystem:
                 # (ready_at in the future) is NOT queue pressure yet — no
                 # engine could serve it, so spawning for it would buy an
                 # idle engine and churn the pool.
-                if scaler is not None:
+                if scaler is not None or joint is not None:
                     if open_loop:
                         now = sched.decode_now + eps
                         queued = sum(1 for item in waiting
@@ -1335,14 +1551,18 @@ class ServingSystem:
                     else:
                         queued = len(waiting)
                     recovered = self._autoscale_tick(scaler, queued)
+                    recovered.extend(self._joint_tick(joint, queued))
                     if recovered:
                         waiting[0:0] = recovered
-            elif scaler is not None and waiting and not self.pool.live_ids:
+            elif (scaler is not None or joint is not None) and waiting \
+                    and not self.pool.live_ids:
                 # Every engine is dead and nothing can step: run the
-                # controller anyway so the respawn-toward-min_engines path
-                # restores capacity (the tick above only runs between
-                # decode turns, which need a live engine to exist).
+                # controllers anyway so the respawn-toward-min_engines /
+                # shift-prefill-to-decode paths restore capacity (the tick
+                # above only runs between decode turns, which need a live
+                # engine to exist).
                 self._autoscale_tick(scaler, len(waiting))
+                self._joint_tick(joint, len(waiting))
             elif open_loop and (pending or waiting):
                 # Decode pool idle with future work: fast-forward the
                 # virtual clock to the next event that can actually

@@ -57,6 +57,15 @@ class FaultEvent:
     count: int = 1                   # transfer faults: attempts affected
     factor: float = 1.0              # slow_engine: step-time multiplier
     duration: float = float("inf")   # slow_engine: window length
+    # Transfer faults under pipelined chunked streaming: one request's
+    # handoff is now MANY transfer ops, so a plan written against op
+    # ordinals alone silently retargets a different chunk when chunking
+    # changes. rid/chunk >= 0 scope the event to one request and/or one
+    # chunk; the `after` ordinal then counts only that (rid, op, chunk)'s
+    # own attempts. -1 (the default) keeps the legacy op-scope addressing,
+    # so pre-streaming plans stay valid for unchunked ops.
+    rid: int = -1                    # transfer faults: target request
+    chunk: int = -1                  # transfer faults: target stream chunk
 
     def __post_init__(self) -> None:
         if self.kind not in FAULT_KINDS:
@@ -69,6 +78,8 @@ class FaultEvent:
             raise ValueError("engine_crash needs an explicit engine id")
         if self.count < 1 or self.after < 0:
             raise ValueError("need count >= 1 and after >= 0")
+        if self.rid < -1 or self.chunk < -1:
+            raise ValueError("rid/chunk must be >= 0, or -1 for unscoped")
         if self.factor < 1.0:
             raise ValueError("slow_engine factor must be >= 1.0 (a straggler"
                              " never speeds an engine up)")
@@ -183,8 +194,14 @@ class FaultInjector:
             e for e in plan.events
             if e.kind in ("transfer_timeout", "transfer_corrupt")]
         self._consumed = [0] * len(self._transfer_events)
-        self._attempts_by_op: Dict[str, int] = {}
-        self._attempts_total = 0
+        # Per-event matching-attempt counters: event i has seen _seen[i]
+        # attempts inside its own scope (op alone for legacy events;
+        # op + rid/chunk for scoped ones), so `after` always means "skip
+        # the first N attempts THIS event could have claimed". For
+        # unscoped events this is arithmetically identical to the old
+        # global per-op / per-any ordinals — pre-streaming plans keep
+        # firing on the very same attempts.
+        self._seen = [0] * len(self._transfer_events)
         # Observability counters (mirrored into bench fault sections).
         self.crashes_fired = 0
         self.timeouts_injected = 0
@@ -222,22 +239,39 @@ class FaultInjector:
         return factor
 
     # -- transfer faults ---------------------------------------------------
-    def transfer_fault(self, op: str) -> Optional[str]:
+    def transfer_fault(self, op: str, rid: Optional[int] = None,
+                       chunk: Optional[int] = None) -> Optional[str]:
         """Per-attempt hook for ``KVTransferEngine``: returns ``"timeout"``
         / ``"corrupt"`` when a scheduled fault claims this attempt, else
-        None. Addressing is by attempt *ordinal* within the event's op
-        scope (``op="any"`` scopes over all RDMA attempts), so retries of
-        a faulted op count as fresh attempts — a ``count=k`` event fails
-        the op ``k`` consecutive times, which is exactly how backoff and
-        retry exhaustion get exercised."""
-        ord_op = self._attempts_by_op.get(op, 0)
-        ord_any = self._attempts_total
-        self._attempts_by_op[op] = ord_op + 1
-        self._attempts_total += 1
+        None. Addressing for legacy (unscoped) events is by attempt
+        *ordinal* within the event's op scope (``op="any"`` scopes over
+        all RDMA attempts) — bit-compatible with pre-streaming plans. An
+        event carrying ``rid``/``chunk`` >= 0 instead claims only attempts
+        for that request/chunk, with ``after`` counted against that
+        ``(rid, op, chunk)``'s own attempts — chunked streaming multiplies
+        transfer ops per request, and scoped addressing is what keeps a
+        plan aimed at one chunk from silently retargeting another. In both
+        schemes retries of a faulted op count as fresh attempts, so a
+        ``count=k`` event fails the op ``k`` consecutive times (how
+        backoff and retry exhaustion get exercised)."""
+        a_rid = -1 if rid is None else rid
+        a_chunk = -1 if chunk is None else chunk
+        # Count the attempt against EVERY event whose scope it falls in
+        # (even events that will not claim it): an event's ordinal stream
+        # must be independent of which other event fires first, or plan
+        # composition would stop being deterministic.
+        ordinals: Dict[int, int] = {}
         for i, ev in enumerate(self._transfer_events):
             if ev.op not in (op, "any"):
                 continue
-            ordinal = ord_any if ev.op == "any" else ord_op
+            if ev.rid >= 0 and ev.rid != a_rid:
+                continue
+            if ev.chunk >= 0 and ev.chunk != a_chunk:
+                continue
+            ordinals[i] = self._seen[i]
+            self._seen[i] += 1
+        for i, ordinal in ordinals.items():
+            ev = self._transfer_events[i]
             if ordinal >= ev.after and self._consumed[i] < ev.count:
                 self._consumed[i] += 1
                 if ev.kind == "transfer_timeout":

@@ -35,6 +35,21 @@ The pool distinguishes **live** and **parked** engines: retirement drains
 an engine's slots to live peers and parks it (the jitted programs stay
 warm), and a later grow revives the lowest parked engine before paying
 for a new one — so scale oscillation never re-compiles.
+
+Peer-to-peer PDC completes the picture with the prefill side:
+
+* :class:`PrefillPool` — the same spawn/park/retire/fail lifecycle over
+  :class:`~repro.serving.engine.PrefillEngine` instances. Prefill holds no
+  resident per-request state between requests, so retirement parks an
+  instance immediately (no drain) and failure only loses the instance,
+  never a request. Instance ids are stable; the scheduler's
+  ``PrefillRouter.resize`` / ``set_prefill_live`` views key on them.
+* :class:`JointAutoscaler` — a capacity-conserving controller that shifts
+  engines between the prefill and decode roles under one SLO budget
+  (DeepServe's serverless joint P/D scaling): TTFT pressure (virtual
+  prefill backlog past the TTFT budget) converts a drained decode engine
+  into a prefill instance; TPOT pressure (decode demand past the SLO
+  batch cap) converts an idle prefill instance into a decode engine.
 """
 from __future__ import annotations
 
@@ -595,6 +610,140 @@ class DecodePool:
 
 
 # ---------------------------------------------------------------------------
+# Prefill pool (peer-to-peer PDC: the prefill side scales independently)
+# ---------------------------------------------------------------------------
+
+
+class PrefillPool:
+    """N prefill instances behind the decode pool's lifecycle semantics.
+
+    Unlike decode engines, prefill instances are stateless between
+    requests (``PrefillEngine.run`` is synchronous and holds no resident
+    slots), so the lifecycle is lighter: retirement parks an instance
+    immediately — no drain, nothing to migrate — and failure loses only
+    the instance, never an in-flight request. What *is* shared with
+    :class:`DecodePool` is the stable-id contract: instance ids never
+    disappear or reindex, parked instances revive for free (their jitted
+    programs stay warm), dead instances restart over their own id, and a
+    fresh spawn extends the roster through ``engine_factory``
+    (``instance_id -> PrefillEngine``). The scheduler mirrors the roster
+    via ``register_prefill_instance`` / ``set_prefill_live``.
+    """
+
+    def __init__(self, engines: Sequence,
+                 engine_factory: Optional[Callable] = None):
+        engines = list(engines)
+        if not engines:
+            raise ValueError("need at least one prefill instance")
+        self._assert_homogeneous(engines)
+        self.engines = engines
+        self.engine_factory = engine_factory
+        self._live = [True] * len(engines)
+        self._dead = [False] * len(engines)
+        self.spawns = 0
+        self.retires = 0
+        self.failures = 0
+
+    @staticmethod
+    def _assert_homogeneous(engines: Sequence) -> None:
+        if len({(e.capacity, e.cfg.name) for e in engines}) != 1:
+            raise ValueError(
+                "prefill instances must share model config and cache "
+                "capacity (handoff payloads assume an identical layout)")
+
+    # -- aggregate views ---------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.engines)
+
+    @property
+    def n_live(self) -> int:
+        return sum(self._live)
+
+    @property
+    def live_ids(self) -> List[int]:
+        return [i for i, live in enumerate(self._live) if live]
+
+    @property
+    def live_mask(self) -> List[bool]:
+        return list(self._live)
+
+    @property
+    def n_dead(self) -> int:
+        return sum(self._dead)
+
+    @property
+    def dead_ids(self) -> List[int]:
+        return [i for i, dead in enumerate(self._dead) if dead]
+
+    @property
+    def loads(self) -> List[int]:
+        """Per-instance in-flight prompt tokens (full roster, stable ids;
+        parked instances report 0 by construction)."""
+        return [e.load for e in self.engines]
+
+    # -- lifecycle ---------------------------------------------------------
+    def spawn_engine(self) -> Tuple[int, bool]:
+        """Grow the pool by one live instance. Returns ``(instance,
+        revived)`` with the same preference order as the decode pool:
+        revive the lowest parked instance (warm programs), restart the
+        lowest dead one over its stable id, else build a fresh instance
+        whose id extends the roster."""
+        for i, live in enumerate(self._live):
+            if not live and not self._dead[i]:
+                self._live[i] = True
+                self.spawns += 1
+                return i, True
+        for i, dead in enumerate(self._dead):
+            if dead:
+                self._dead[i] = False
+                self._live[i] = True
+                self.spawns += 1
+                return i, True
+        if self.engine_factory is None:
+            raise RuntimeError(
+                "prefill pool has no engine_factory; cannot spawn a new "
+                "instance")
+        eng = self.engine_factory(self.n)
+        self._assert_homogeneous([self.engines[0], eng])
+        self.engines.append(eng)
+        self._live.append(True)
+        self._dead.append(False)
+        self.spawns += 1
+        return self.n - 1, False
+
+    def retire_engine(self, instance: int) -> None:
+        """Shrink the pool: park ``instance`` (its id — and warm jitted
+        programs — survive for a later revival). Prefill holds no resident
+        requests, so there is nothing to drain; already-routed work was
+        charged to the instance's virtual clock and completes there."""
+        if not self._live[instance]:
+            raise ValueError(f"prefill instance {instance} is already parked")
+        if self.n_live <= 1:
+            raise ValueError("cannot retire the last live prefill instance")
+        self._live[instance] = False
+        self.retires += 1
+
+    def fail_engine(self, instance: int) -> None:
+        """Crash ``instance``: dead, not parked (revival is a restart).
+        No request is lost — prefill runs to completion synchronously —
+        but the roster shrinks until a spawn restarts the id."""
+        if self._dead[instance]:
+            raise ValueError(f"prefill instance {instance} is already dead")
+        self._live[instance] = False
+        self._dead[instance] = True
+        self.failures += 1
+
+    # -- reporting ---------------------------------------------------------
+    def engine_stats(self) -> List[Dict[str, Any]]:
+        return [{"instance": i, "live": self._live[i], "dead": self._dead[i],
+                 "load": eng.load,
+                 "fresh_dispatches": eng.continue_calls,
+                 "suffix_dispatches": eng.suffix_calls}
+                for i, eng in enumerate(self.engines)]
+
+
+# ---------------------------------------------------------------------------
 # SLO-driven utilization controller
 # ---------------------------------------------------------------------------
 
@@ -699,4 +848,114 @@ class PoolAutoscaler:
                 return "shrink"
             return "hold"
         self._shrink_streak = 0
+        return "hold"
+
+
+class JointAutoscaler:
+    """Capacity-conserving joint P/D controller: shift engines between the
+    prefill and decode roles under one SLO budget.
+
+    Where :class:`PoolAutoscaler` changes the decode pool's *size*, this
+    controller changes the *split* of a fixed engine budget between roles
+    (the generalization the paper's peer-to-peer architecture implies and
+    DeepServe's serverless controller implements). Evaluated between
+    decode turns on pure control-plane signals, so a fixed request stream
+    always produces the same shift sequence:
+
+    * **TPOT pressure** — decode demand (active slots + admission-queue
+      depth) exceeds what the live decode engines carry at the SLO batch
+      cap (the same :meth:`DecodeCostModel.max_batch_for` projection the
+      admission gate enforces);
+    * **TTFT pressure** — the worst live prefill instance's virtual
+      backlog (queued prefill seconds, :meth:`Scheduler.prefill_backlog_s`)
+      exceeds the TTFT budget.
+
+    ``shift_d2p`` fires when prefill is TTFT-pressured AND the decode pool
+    can spare an engine (demand fits on N-1 engines at the cap, the victim
+    is drainable, and the clamps allow it): one decode engine drains and
+    parks, one prefill instance spawns. ``shift_p2d`` is the mirror image
+    for TPOT pressure against an idle prefill pool. Per-direction patience
+    plus a shared cooldown give the same flap-damping hysteresis as the
+    size controller; the two directions are mutually exclusive within a
+    turn by construction (each requires the other role to be unpressured).
+    """
+
+    def __init__(self, cost: DecodeCostModel, n_slots: int, *,
+                 min_prefill: int, max_prefill: int,
+                 min_decode: int, max_decode: int,
+                 tpot_budget_s: Optional[float] = None,
+                 ttft_budget_s: Optional[float] = None,
+                 patience: int = 1, cooldown: int = 2):
+        if n_slots < 1:
+            raise ValueError("n_slots must be positive")
+        for lo, hi, what in ((min_prefill, max_prefill, "prefill"),
+                             (min_decode, max_decode, "decode")):
+            if not 1 <= lo <= hi:
+                raise ValueError(
+                    f"need 1 <= min_{what} <= max_{what}, got [{lo}, {hi}]")
+        if patience < 1 or cooldown < 0:
+            raise ValueError("patience must be >= 1 and cooldown >= 0")
+        self.engine_cap = n_slots
+        if tpot_budget_s is not None:
+            self.engine_cap = min(n_slots,
+                                  max(1, cost.max_batch_for(tpot_budget_s)))
+        self.min_prefill = min_prefill
+        self.max_prefill = max_prefill
+        self.min_decode = min_decode
+        self.max_decode = max_decode
+        self.ttft_budget_s = ttft_budget_s
+        self.patience = patience
+        self.cooldown = cooldown
+        self.reset()
+
+    def reset(self) -> None:
+        """Fresh hysteresis state (one serve() wave = one controller run)."""
+        self._d2p_streak = 0
+        self._p2d_streak = 0
+        self._cooldown_left = 0
+
+    def decide(self, n_live_prefill: int, n_live_decode: int, active: int,
+               queue_depth: int, prefill_backlog_s: float,
+               decode_shrinkable: bool = True) -> str:
+        """'shift_d2p' | 'shift_p2d' | 'hold' for this decode turn.
+
+        ``decode_shrinkable`` is the atomic-drain pre-check for the
+        would-be decode victim (``DecodePool.can_drain``); a d2p shift the
+        peers cannot absorb reports hold and resets the streak, exactly
+        like the size controller's shrink path.
+        """
+        if self._cooldown_left > 0:
+            self._cooldown_left -= 1
+            self._d2p_streak = self._p2d_streak = 0
+            return "hold"
+        demand = active + queue_depth
+        ttft_pressured = (self.ttft_budget_s is not None
+                          and prefill_backlog_s > self.ttft_budget_s)
+        tpot_pressured = demand > n_live_decode * self.engine_cap
+        # An idle prefill pool has burned through its backlog (well under
+        # budget); only then may it donate an instance to decode.
+        prefill_idle = prefill_backlog_s <= (self.ttft_budget_s or 0.0) / 2
+        if (ttft_pressured and not tpot_pressured and decode_shrinkable
+                and n_live_decode > self.min_decode
+                and queue_depth == 0
+                and demand <= (n_live_decode - 1) * self.engine_cap
+                and n_live_prefill < self.max_prefill):
+            self._p2d_streak = 0
+            self._d2p_streak += 1
+            if self._d2p_streak >= self.patience:
+                self._d2p_streak = 0
+                self._cooldown_left = self.cooldown
+                return "shift_d2p"
+            return "hold"
+        self._d2p_streak = 0
+        if (tpot_pressured and not ttft_pressured and prefill_idle
+                and n_live_prefill > self.min_prefill
+                and n_live_decode < self.max_decode):
+            self._p2d_streak += 1
+            if self._p2d_streak >= self.patience:
+                self._p2d_streak = 0
+                self._cooldown_left = self.cooldown
+                return "shift_p2d"
+            return "hold"
+        self._p2d_streak = 0
         return "hold"

@@ -68,6 +68,8 @@ class RequestTrace:
     reused_tokens: int = 0
     computed_tokens: int = 0
     transfer_seconds: float = 0.0
+    transfer_chunks: int = 0   # pipelined handoff: chunks shipped (0 = sync)
+    overlap_seconds: float = 0.0   # transfer time hidden behind prefill
     decode_admit: float = 0.0
     decode_end: float = 0.0
     decode_iters: int = 0
@@ -145,7 +147,27 @@ class PrefillRouter:
             raise ValueError("need at least one prefill instance")
         self.n = n_instances
 
-    def select(self, loads: Sequence[float]) -> int:
+    def resize(self, n_instances: int) -> None:
+        """The prefill pool spawned instances: ids ``[old_n, n_instances)``
+        now exist. Instance ids never disappear (retired instances are
+        parked, not removed — the same stable-id rule the decode pool
+        enforces), so shrinking is an error."""
+        if n_instances < self.n:
+            raise ValueError(
+                "prefill instance ids never disappear (retired instances "
+                f"are parked, not removed): cannot resize {self.n} -> "
+                f"{n_instances}")
+        self.n = n_instances
+
+    def _candidates(self,
+                    candidates: Optional[Sequence[int]]) -> List[int]:
+        cands = list(range(self.n)) if candidates is None else list(candidates)
+        if not cands:
+            raise ValueError("no live prefill instance to route to")
+        return cands
+
+    def select(self, loads: Sequence[float],
+               candidates: Optional[Sequence[int]] = None) -> int:
         raise NotImplementedError
 
     def on_complete(self, instance: int) -> None:  # pragma: no cover - hook
@@ -157,12 +179,15 @@ class LeastLoadedRouter(PrefillRouter):
 
     name = "least_loaded"
 
-    def select(self, loads: Sequence[int]) -> int:
-        return min(range(self.n), key=lambda i: (loads[i], i))
+    def select(self, loads: Sequence[int],
+               candidates: Optional[Sequence[int]] = None) -> int:
+        return min(self._candidates(candidates), key=lambda i: (loads[i], i))
 
 
 class RoundRobinRouter(PrefillRouter):
-    """Cache-affinity-free cyclic assignment — the purest stateless policy."""
+    """Cache-affinity-free cyclic assignment — the purest stateless policy.
+    With parked instances the cycle runs over the live ids (first live id
+    at or after the cursor)."""
 
     name = "round_robin"
 
@@ -170,9 +195,11 @@ class RoundRobinRouter(PrefillRouter):
         super().__init__(n_instances)
         self._next = 0
 
-    def select(self, loads: Sequence[int]) -> int:
-        i = self._next
-        self._next = (self._next + 1) % self.n
+    def select(self, loads: Sequence[int],
+               candidates: Optional[Sequence[int]] = None) -> int:
+        cands = self._candidates(candidates)
+        i = next((c for c in cands if c >= self._next), cands[0])
+        self._next = (i + 1) % self.n
         return i
 
 
@@ -192,8 +219,14 @@ class QueueDepthRouter(PrefillRouter):
         super().__init__(n_instances)
         self.depth = [0] * n_instances
 
-    def select(self, loads: Sequence[int]) -> int:
-        i = min(range(self.n), key=lambda j: (self.depth[j], j))
+    def resize(self, n_instances: int) -> None:
+        super().resize(n_instances)
+        self.depth.extend([0] * (n_instances - len(self.depth)))
+
+    def select(self, loads: Sequence[int],
+               candidates: Optional[Sequence[int]] = None) -> int:
+        i = min(self._candidates(candidates),
+                key=lambda j: (self.depth[j], j))
         self.depth[i] += 1
         return i
 
@@ -670,6 +703,16 @@ class SchedulerConfig:
     tpot_budget_ms: Optional[float] = None
     admission: str = "queue"                 # "queue" | "shed"
     prefill_token_cost_s: float = 2e-4
+    # Pipelined chunked KV streaming (peer-to-peer PDC handoff): each
+    # prefill chunk's KV blocks ship over the RDMA plane while the next
+    # chunk computes, so TTFT charges max(prefill, transfer) + the last
+    # chunk's wire time instead of prefill + transfer. Token-identical to
+    # the synchronous handoff (the decode-side cache is rebuilt from the
+    # streamed chunks); archs whose caches are not token-sliceable (SSM /
+    # hybrid) fall back to the synchronous path. stream_chunk is the chunk
+    # width in tokens (None = 8).
+    stream_handoff: bool = False
+    stream_chunk: Optional[int] = None
     decode_cost: DecodeCostModel = dataclasses.field(
         default_factory=DecodeCostModel)
     interleave_microbatches: bool = False
@@ -716,6 +759,20 @@ class SchedulerConfig:
     autoscale_grow_patience: int = 1
     autoscale_shrink_patience: int = 3
     autoscale_cooldown: int = 2
+    # Joint P/D autoscaling (serving/pool.py JointAutoscaler): a capacity-
+    # conserving controller that SHIFTS engines between the prefill and
+    # decode roles under one SLO budget — TTFT pressure (virtual prefill
+    # backlog past ttft_budget_ms) moves a drained decode engine into the
+    # prefill pool, TPOT pressure (decode demand past the per-engine SLO
+    # batch cap) moves an idle prefill instance into the decode pool.
+    # min/max_prefill clamp the prefill roster the same way min/max_engines
+    # clamp decode; patience/cooldown are per-direction hysteresis.
+    joint_autoscale: bool = False
+    min_prefill: int = 1
+    max_prefill: int = 4
+    ttft_budget_ms: Optional[float] = None
+    joint_patience: int = 1
+    joint_cooldown: int = 2
     # Graceful degradation under capacity loss: when set, a queued (not
     # yet admitted) request whose wait since KV-ready exceeds this many
     # virtual seconds is shed even in queue mode — after an engine failure
@@ -777,8 +834,10 @@ class Scheduler:
         self.n_decode = len(self.slot_mgrs)
         # Liveness mask over decode engines (autoscaling parks retired
         # engines in place). Persists across epochs — engine lifecycle is
-        # pool state, not per-wave state.
+        # pool state, not per-wave state. Prefill instances get the same
+        # treatment (the joint autoscaler parks/revives them mid-wave).
         self._live = [True] * self.n_decode
+        self._prefill_live = [True] * n_prefill
         cost = self.config.decode_cost
         if (self.config.use_mtp and cost.mtp_iter_factor == 1.0
                 and cost.mtp_accept == 0.0):
@@ -813,6 +872,14 @@ class Scheduler:
         self.tracker = SLOTracker()
         self.traces: Dict[int, RequestTrace] = {}
         self._instance_free_at = [0.0] * self.n_prefill
+        # Token-weighted in-flight prefill load, committed at routing time
+        # and released on EVERY completion path (decode finish, prefill-only
+        # finish, gate shed, fault loss → recovery → finish/shed). Keyed by
+        # rid so a release is idempotent — the pre-fix accounting leaked
+        # the load of shed/faulted requests and skewed least_loaded routing
+        # toward instances that never served them.
+        self._prefill_inflight = [0.0] * self.n_prefill
+        self._routed_load: Dict[int, Tuple[int, int]] = {}
         # One virtual clock per decode engine (engines step concurrently in
         # reality; each clock advances by its own batch's step cost).
         self._decode_now = [0.0] * self.n_decode
@@ -837,6 +904,16 @@ class Scheduler:
         self.scale_events: List[Dict[str, Any]] = []
         self.engine_count_timeline: List[Tuple[float, int]] = [
             (0.0, sum(self._live))]
+        self.prefill_count_timeline: List[Tuple[float, int]] = [
+            (0.0, sum(self._prefill_live))]
+        # Pipelined-handoff observability (per-epoch): chunks streamed,
+        # transfer seconds hidden behind prefill, bytes on the wire, and
+        # the largest single chunk in flight.
+        self.stream_requests = 0
+        self.stream_chunks = 0
+        self.stream_overlap_s = 0.0
+        self.stream_bytes = 0
+        self.stream_max_chunk_bytes = 0
         # Fault-tolerance bookkeeping (per-epoch like everything above).
         # _slowdown persists per-engine straggler factors only within the
         # epoch; the injector re-asserts them every turn anyway.
@@ -879,21 +956,52 @@ class Scheduler:
         self.traces[rid] = tr
         return tr
 
-    def route_prefill(self, trace: RequestTrace,
-                      loads: Sequence[int]) -> int:
+    def route_prefill(self, trace: RequestTrace, loads: Sequence[int],
+                      candidates: Optional[Sequence[int]] = None) -> int:
         """Pick a prefill instance for ``trace``.
 
         Live engine loads are augmented with each instance's *virtual*
         backlog (queued prefill seconds not yet elapsed at the request's
-        arrival, in prompt-token equivalents) — in the sequential CPU model
-        live loads are always zero by the time the decision is made, so the
-        virtual timeline is what actually spreads load across instances.
+        arrival, in prompt-token equivalents) plus the scheduler-held
+        token-weighted in-flight load (requests routed but not yet finished
+        or shed) — in the sequential CPU model live loads are always zero
+        by the time the decision is made, so the virtual signals are what
+        actually spread load across instances. ``candidates`` restricts
+        routing to the live roster (parked/failed instances excluded);
+        omitted means every live instance.
         """
         cost = self.config.prefill_token_cost_s
         backlog = [max(0.0, free - trace.arrival) / cost
                    for free in self._instance_free_at]
-        effective = [loads[i] + backlog[i] for i in range(len(loads))]
-        return self.router.select(effective)
+        effective = [loads[i] + backlog[i] + self._prefill_inflight[i]
+                     for i in range(len(loads))]
+        if candidates is None:
+            candidates = self.live_prefill_ids
+        i = self.router.select(effective, candidates=candidates)
+        # Commit the token-weighted load; released via _release_prefill on
+        # every terminal path (finish / shed / prefill-only).
+        self._prefill_inflight[i] += trace.prompt_tokens
+        self._routed_load[trace.rid] = (i, trace.prompt_tokens)
+        return i
+
+    def _release_prefill(self, rid: int) -> None:
+        """Release a routed request's token-weighted in-flight load.
+        Idempotent (keyed by rid), so a request that is shed after a fault
+        recovery cannot double-decrement."""
+        entry = self._routed_load.pop(rid, None)
+        if entry is not None:
+            instance, tokens = entry
+            self._prefill_inflight[instance] -= tokens
+
+    @property
+    def prefill_inflight_tokens(self) -> List[float]:
+        """Per-instance token-weighted in-flight routed load (the
+        least_loaded signal; must return to all-zero when a wave drains)."""
+        return list(self._prefill_inflight)
+
+    @property
+    def live_prefill_ids(self) -> List[int]:
+        return [i for i, live in enumerate(self._prefill_live) if live]
 
     def on_prefill_done(self, trace: RequestTrace, instance: int,
                         computed_tokens: int, reused_tokens: int) -> None:
@@ -908,6 +1016,23 @@ class Scheduler:
 
     def on_transfer(self, trace: RequestTrace, seconds: float) -> None:
         trace.transfer_seconds = seconds
+
+    def on_stream_transfer(self, trace: RequestTrace, seconds: float,
+                           chunks: int, overlap_s: float, nbytes: int,
+                           max_chunk_bytes: int) -> None:
+        """Pipelined chunked handoff: ``seconds`` is the tail of the
+        transfer pipeline past prefill completion (the only part TTFT
+        still pays — ``ready_at`` stays ``prefill_end + transfer_seconds``)
+        and ``overlap_s`` the wire time hidden behind prefill compute."""
+        trace.transfer_seconds = seconds
+        trace.transfer_chunks = chunks
+        trace.overlap_seconds = overlap_s
+        self.stream_requests += 1
+        self.stream_chunks += chunks
+        self.stream_overlap_s += overlap_s
+        self.stream_bytes += nbytes
+        self.stream_max_chunk_bytes = max(self.stream_max_chunk_bytes,
+                                          max_chunk_bytes)
 
     # -- decode side -------------------------------------------------------
     def admission_decision(self, trace: RequestTrace, engine: int = 0,
@@ -994,6 +1119,7 @@ class Scheduler:
         trace.decode_admit = trace.decode_end = trace.ready_at
         self.tracker.record(trace)
         self.router.on_complete(trace.prefill_instance)
+        self._release_prefill(trace.rid)
 
     def on_shed(self, trace: RequestTrace) -> None:
         trace.shed = True
@@ -1009,6 +1135,12 @@ class Scheduler:
         self.tracker.record(trace)
         if trace.prefill_instance >= 0:     # capacity rejects never prefill
             self.router.on_complete(trace.prefill_instance)
+        # A shed request's routed load must come off its instance too —
+        # leaking it here left the engine looking permanently busy and
+        # skewed every later least_loaded decision (idempotent: an
+        # up-front capacity reject was never routed, so there is nothing
+        # to release).
+        self._release_prefill(trace.rid)
 
     def on_decode_step(self, active_rids: Sequence[int],
                        finished_rids: Sequence[int],
@@ -1063,6 +1195,7 @@ class Scheduler:
             tr.decode_end = self._decode_now[engine]
             self.tracker.record(tr)
             self.router.on_complete(tr.prefill_instance)
+            self._release_prefill(rid)
         return dt
 
     def on_migrate(self, trace: RequestTrace, src: int, dst: int,
@@ -1142,6 +1275,48 @@ class Scheduler:
         else:
             self._live[engine] = live
 
+    # -- dynamic prefill lifecycle (prefill pool / joint autoscaling) ------
+    def register_prefill_instance(self) -> int:
+        """A fresh prefill instance joined the pool mid-wave: extend its
+        virtual clock, in-flight accounting, and the router's id space.
+        The new clock starts at the live prefill frontier — a spawned
+        instance cannot have been free in the past, and warming it there
+        keeps routed TTFTs monotone on the virtual timeline."""
+        live_free = [f for f, live in zip(self._instance_free_at,
+                                          self._prefill_live) if live]
+        frontier = min(live_free) if live_free else 0.0
+        i = self.n_prefill
+        self.n_prefill += 1
+        self._prefill_live.append(True)
+        self._instance_free_at.append(frontier)
+        self._prefill_inflight.append(0.0)
+        self.router.resize(self.n_prefill)
+        return i
+
+    def set_prefill_live(self, instance: int, live: bool) -> None:
+        """Park (retired) or revive a prefill instance. A revived
+        instance's clock is pulled to the live frontier: it comes back
+        *now*, not at the stale instant it was parked."""
+        if live and not self._prefill_live[instance]:
+            live_free = [f for f, on in zip(self._instance_free_at,
+                                            self._prefill_live) if on]
+            frontier = min(live_free) if live_free else 0.0
+            self._prefill_live[instance] = True
+            self._instance_free_at[instance] = max(
+                self._instance_free_at[instance], frontier)
+        else:
+            self._prefill_live[instance] = live
+
+    def prefill_backlog_s(self, now: float) -> float:
+        """TTFT pressure signal: the worst live instance's queued prefill
+        seconds not yet elapsed at ``now`` (0.0 = every live instance is
+        free). This is exactly the backlog ``route_prefill`` spreads, so
+        the joint autoscaler and the router act on one number."""
+        lags = [max(0.0, free - now)
+                for free, live in zip(self._instance_free_at,
+                                      self._prefill_live) if live]
+        return max(lags) if lags else 0.0
+
     # -- fault tolerance ---------------------------------------------------
     def set_engine_slowdown(self, engine: int, factor: float) -> None:
         """Apply a straggler factor to ``engine``'s step-time charging
@@ -1161,12 +1336,13 @@ class Scheduler:
 
     def charge_recovery_prefill(self, computed_tokens: int,
                                 at: float) -> Tuple[int, float]:
-        """Charge a replay re-prefill to the least-backlogged prefill
-        instance, starting no earlier than ``at`` (the failure-detection
-        instant). Returns ``(instance, completion_time)``; concurrent
-        recoveries serialize per instance exactly like arrivals do."""
-        i = min(range(self.n_prefill),
-                key=lambda j: (self._instance_free_at[j], j))
+        """Charge a replay re-prefill to the least-backlogged *live*
+        prefill instance, starting no earlier than ``at`` (the failure-
+        detection instant). Returns ``(instance, completion_time)``;
+        concurrent recoveries serialize per instance exactly like arrivals
+        do."""
+        cands = self.live_prefill_ids or list(range(self.n_prefill))
+        i = min(cands, key=lambda j: (self._instance_free_at[j], j))
         start = max(at, self._instance_free_at[i])
         end = start + computed_tokens * self.config.prefill_token_cost_s
         self._instance_free_at[i] = end
@@ -1197,14 +1373,21 @@ class Scheduler:
         trace.decode_engine = engine
         self._decode_now[engine] = max(self._decode_now[engine], ready_at)
 
-    def record_scale_event(self, action: str, engine: int) -> None:
-        """Stamp a grow/shrink decision on the virtual timeline (called
-        after the pool applied it, so the live count is the new one)."""
+    def record_scale_event(self, action: str, engine: int,
+                           role: str = "decode") -> None:
+        """Stamp a grow/shrink/shift decision on the virtual timeline
+        (called after the pool applied it, so the live counts are the new
+        ones). ``role`` tags which pool the event's ``engine`` id indexes;
+        joint shifts (``shift_p2d`` / ``shift_d2p``) move both counts, so
+        both timelines get a point."""
         n_live = sum(self._live)
+        n_prefill_live = sum(self._prefill_live)
         t = self.decode_now
         self.scale_events.append({"t": t, "action": action, "engine": engine,
-                                  "engines_live": n_live})
+                                  "role": role, "engines_live": n_live,
+                                  "prefill_live": n_prefill_live})
         self.engine_count_timeline.append((t, n_live))
+        self.prefill_count_timeline.append((t, n_prefill_live))
 
     def feedback_mtp_acceptance(self) -> Optional[float]:
         """Fold the draft-acceptance rate *measured* by the finished trace
@@ -1300,7 +1483,17 @@ class Scheduler:
         if self.recovery_ttfts:
             s["recovery_ttft_p50_s"] = SLOTracker._pct(self.recovery_ttfts, 50)
             s["recovery_ttft_p99_s"] = SLOTracker._pct(self.recovery_ttfts, 99)
-        if self.config.autoscale or self.scale_events:
+        if self.config.stream_handoff or self.stream_requests:
+            s["stream_requests"] = self.stream_requests
+            s["stream_chunks"] = self.stream_chunks
+            s["stream_overlap_s"] = self.stream_overlap_s
+            s["stream_bytes"] = self.stream_bytes
+            s["stream_max_chunk_bytes"] = self.stream_max_chunk_bytes
+        if self.n_prefill > 1 or self.config.joint_autoscale:
+            s["prefill_instances"] = self.n_prefill
+            s["prefill_live"] = sum(self._prefill_live)
+        if self.config.autoscale or self.config.joint_autoscale \
+                or self.scale_events:
             # An autoscale wave with zero events is a legitimate all-hold
             # run — still report the (flat) timeline rather than looking
             # like autoscale was off.
@@ -1311,4 +1504,12 @@ class Scheduler:
                                      for e in self.scale_events)
             s["engine_count_timeline"] = [[round(t, 9), n] for t, n
                                           in self.engine_count_timeline]
+        if self.config.joint_autoscale or any(
+                e["action"].startswith("shift_") for e in self.scale_events):
+            s["shifts_d2p"] = sum(e["action"] == "shift_d2p"
+                                  for e in self.scale_events)
+            s["shifts_p2d"] = sum(e["action"] == "shift_p2d"
+                                  for e in self.scale_events)
+            s["prefill_count_timeline"] = [[round(t, 9), n] for t, n
+                                           in self.prefill_count_timeline]
         return s

@@ -23,7 +23,8 @@ to the fault-free engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import inspect
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -71,11 +72,51 @@ def connection_map(prefill_tp: int, decode_tp: int, decode_dp: int
             for t in range(decode_tp) for d in range(decode_dp)}
 
 
-def transfer_balance(mapping: Dict[tuple, int], prefill_tp: int) -> float:
-    """min/max pulls per source rank (1.0 = perfectly balanced)."""
-    counts = np.zeros(prefill_tp, np.int64)
-    for src in mapping.values():
-        counts[src % prefill_tp] += 1
+def live_connection_map(live_ranks: Sequence[int], decode_tp: int,
+                        decode_dp: int) -> Dict[tuple, int]:
+    """Connection mapping over the *live* prefill roster.
+
+    With pooled spawn/park/retire the prefill ranks are no longer the
+    contiguous ``0..tp-1`` the paper's formula assumes: the roster is an
+    arbitrary set of instance ids. We apply the deterministic mapping over
+    ``len(live_ranks)`` virtual slots, then translate each slot to the
+    actual live rank in sorted id order — so the map only ever points at
+    live instances and stays deterministic for a given roster.
+    """
+    order = sorted(set(live_ranks))
+    if not order:
+        raise ValueError("live_connection_map needs at least one live rank")
+    n = len(order)
+    base = connection_map(n, decode_tp, decode_dp)
+    return {key: order[src % n] for key, src in base.items()}
+
+
+def transfer_balance(mapping: Dict[tuple, int], prefill_tp: int,
+                     live_ranks: Optional[Sequence[int]] = None) -> float:
+    """min/max pulls per source rank (1.0 = perfectly balanced).
+
+    Legacy call (``live_ranks=None``) assumes the static contiguous
+    ``0..prefill_tp-1`` roster. With pooled spawn/retire that assumption
+    lies: pass the live roster and the balance is recomputed over exactly
+    those ranks — a mapping still pointing at a retired rank raises
+    instead of silently folding its pulls onto a live one.
+    """
+    if live_ranks is not None:
+        order = sorted(set(live_ranks))
+        if not order:
+            raise ValueError("transfer_balance needs at least one live rank")
+        index = {rank: i for i, rank in enumerate(order)}
+        counts = np.zeros(len(order), np.int64)
+        for src in mapping.values():
+            if src not in index:
+                raise ValueError(
+                    f"stale connection map: source rank {src} is not in the "
+                    f"live prefill roster {order}")
+            counts[index[src]] += 1
+    else:
+        counts = np.zeros(prefill_tp, np.int64)
+        for src in mapping.values():
+            counts[src % prefill_tp] += 1
     nz = counts[counts > 0]
     return float(nz.min() / nz.max()) if len(nz) else 1.0
 
@@ -114,6 +155,12 @@ class KVTransferEngine:
         self.backoff_base_s = backoff_base_s
         self.backoff_cap_s = backoff_cap_s
         self.fault_hook = fault_hook
+        # Hook arity is probed once per hook object: new-style hooks
+        # (FaultInjector.transfer_fault) take (op, rid, chunk) so chunked
+        # streaming can address faults per (rid, op, chunk); legacy
+        # ``lambda op: ...`` hooks keep working unchanged.
+        self._hook_probed: Any = None
+        self._hook_scoped = False
         self.transfers = 0
         self.bytes_moved = 0
         self.migrations = 0
@@ -129,7 +176,26 @@ class KVTransferEngine:
         self.clock.elapsed += seconds
         return seconds
 
-    def _deliver(self, payload: Any, op: str) -> Tuple[float, int]:
+    def _consult_hook(self, op: str, rid: Optional[int],
+                      chunk: Optional[int]) -> Optional[str]:
+        """Call the fault hook with per-(rid, chunk) scope when it accepts
+        it, falling back to the legacy single-argument form otherwise."""
+        hook = self.fault_hook
+        if hook is not self._hook_probed:
+            self._hook_probed = hook
+            try:
+                params = inspect.signature(hook).parameters
+                self._hook_scoped = ("rid" in params and "chunk" in params) \
+                    or any(p.kind == inspect.Parameter.VAR_KEYWORD
+                           for p in params.values())
+            except (TypeError, ValueError):
+                self._hook_scoped = False
+        if self._hook_scoped:
+            return hook(op, rid=rid, chunk=chunk)
+        return hook(op)
+
+    def _deliver(self, payload: Any, op: str, rid: Optional[int] = None,
+                 chunk: Optional[int] = None) -> Tuple[float, int]:
         """One op through the retry loop. Returns (seconds, nbytes) on a
         fingerprint-verified delivery; raises :class:`TransferError` after
         ``max_retries`` failed retries with the burned seconds attached."""
@@ -139,7 +205,7 @@ class KVTransferEngine:
         sent_fp = fingerprint(payload)
         dt, failures = 0.0, 0
         while True:
-            fault = self.fault_hook(op)
+            fault = self._consult_hook(op, rid, chunk)
             if fault == "timeout":
                 # The plane stalls for the full window before the sender
                 # gives up on this attempt; no bytes land.
@@ -173,18 +239,20 @@ class KVTransferEngine:
             dt += self._idle(min(self.backoff_base_s * (1 << (failures - 1)),
                                  self.backoff_cap_s))
 
-    def transfer(self, cache: Any) -> float:
-        dt, nbytes = self._deliver(cache, "transfer")
+    def transfer(self, cache: Any, *, rid: Optional[int] = None,
+                 chunk: Optional[int] = None) -> float:
+        dt, nbytes = self._deliver(cache, "transfer", rid, chunk)
         self.transfers += 1
         self.bytes_moved += nbytes
         return dt
 
-    def migrate(self, payload: Any) -> float:
+    def migrate(self, payload: Any, *, rid: Optional[int] = None,
+                chunk: Optional[int] = None) -> float:
         """Cross-engine decode KV migration rides the same isolated plane
         as the prefill→decode handoff (it must never contend with decode
         compute traffic), accounted separately so pool rebalancing cost is
         visible in benchmarks."""
-        dt, nbytes = self._deliver(payload, "migrate")
+        dt, nbytes = self._deliver(payload, "migrate", rid, chunk)
         self.migrations += 1
         self.bytes_migrated += nbytes
         return dt

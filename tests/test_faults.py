@@ -140,6 +140,75 @@ def test_injector_any_scope_counts_all_rdma_attempts():
     assert inj.transfer_fault("transfer") == "timeout"  # global attempt #1
 
 
+def test_injector_chunk_scoped_event_hits_exactly_its_chunk():
+    """Chunked streaming multiplies transfer attempts per request; a
+    (rid, chunk)-scoped event must claim only that chunk's attempts while
+    an unscoped event on the same plan keeps counting EVERY attempt in its
+    legacy global ordinal space."""
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="transfer", rid=7, chunk=2,
+                   count=1),
+        FaultEvent("transfer_corrupt", op="transfer", after=3, count=1),
+    ]))
+    # rid 7 streams chunks 0..2: only chunk 2 times out
+    assert inj.transfer_fault("transfer", rid=7, chunk=0) is None
+    assert inj.transfer_fault("transfer", rid=7, chunk=1) is None
+    assert inj.transfer_fault("transfer", rid=7, chunk=2) == "timeout"
+    # the unscoped corrupt counted all three attempts above: ordinal 3 is
+    # the very next transfer attempt, whatever its rid/chunk
+    assert inj.transfer_fault("transfer", rid=8, chunk=0) == "corrupt"
+    # another request's chunk 2 is untouched (the scoped event is spent)
+    assert inj.transfer_fault("transfer", rid=8, chunk=2) is None
+    assert (inj.timeouts_injected, inj.corruptions_injected) == (1, 1)
+
+
+def test_injector_rid_scope_is_an_independent_ordinal_space():
+    """`after` on a rid-scoped event counts that request's own attempts,
+    not the global stream — other requests' traffic cannot shift which
+    attempt gets hit."""
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="any", rid=5, after=1, count=1)]))
+    assert inj.transfer_fault("transfer", rid=4, chunk=0) is None  # rid 4
+    assert inj.transfer_fault("transfer", rid=4, chunk=1) is None
+    assert inj.transfer_fault("transfer", rid=5, chunk=0) is None  # #0 of 5
+    assert inj.transfer_fault("migrate", rid=5) == "timeout"       # #1 of 5
+    with pytest.raises(ValueError, match="rid/chunk must be >= 0"):
+        FaultEvent("transfer_timeout", rid=-2)
+
+
+def test_chunk_scoped_timeout_under_streaming_changes_no_tokens(granite):
+    """End-to-end: a timeout aimed at one stream chunk retries exactly
+    that chunk — the pipelined handoff stays bit-identical and only the
+    targeted request pays the retry latency."""
+    cfg, params = granite
+    reqs = stream_requests(3, max_new=4, seed=5)
+    kw = dict(n_prefill=2, decode_batch=2, capacity=32,
+              stream_handoff=True, stream_chunk=4)
+    ref_sys = ServingSystem(params, cfg, **kw)
+    ref = {r.rid: list(r.tokens) for r in ref_sys.serve(reqs)}
+    ref_chunks = {t.rid: t.transfer_chunks
+                  for t in ref_sys.scheduler.traces.values()}
+
+    inj = FaultInjector(FaultPlan([
+        FaultEvent("transfer_timeout", op="transfer", rid=1, chunk=1,
+                   count=1)]))
+    system = ServingSystem(params, cfg, fault_injector=inj, **kw)
+    got = {r.rid: list(r.tokens) for r in system.serve(reqs)}
+    assert got == ref
+    assert inj.timeouts_injected == 1
+    sched = system.scheduler
+    assert sched.transfer_timeouts == 1 and sched.transfer_retries == 1
+    for t in sched.traces.values():
+        assert t.transfer_chunks == ref_chunks[t.rid]
+        # only rid 1 pays the retry (timeout window + backoff) on the wire
+        ref_t = ref_sys.scheduler.traces[t.rid]
+        if t.rid == 1:
+            assert t.transfer_seconds > ref_t.transfer_seconds
+        else:
+            assert t.transfer_seconds == pytest.approx(
+                ref_t.transfer_seconds)
+
+
 # ---------------------------------------------------------------------------
 # KVTransferEngine: timeout + capped exponential backoff + fingerprints
 # ---------------------------------------------------------------------------

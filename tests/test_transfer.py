@@ -13,6 +13,7 @@ from repro.serving.transfer import (
     RDMA_PLANE,
     cache_nbytes,
     connection_map,
+    live_connection_map,
     prefill_source_rank,
     transfer_balance,
 )
@@ -112,3 +113,35 @@ def test_connection_map_deterministic_and_balanced():
     # spot-check the paper formula directly
     assert prefill_source_rank(8, 4, 4, decode_tp_rank=1, decode_dp_rank=3) \
         == m1[(1, 3)]
+
+
+def test_live_connection_map_tracks_the_roster():
+    # the full contiguous roster reduces to the paper's static formula
+    assert live_connection_map([0, 1, 2, 3], decode_tp=2, decode_dp=2) \
+        == connection_map(prefill_tp=4, decode_tp=2, decode_dp=2)
+    # a pooled roster with parked/failed ids: every source is live, the
+    # map is deterministic (roster order does not matter), and the balance
+    # is recomputed over exactly the live ranks
+    roster = [3, 0, 2]                        # instance 1 parked
+    m = live_connection_map(roster, decode_tp=2, decode_dp=2)
+    assert m == live_connection_map([0, 2, 3], decode_tp=2, decode_dp=2)
+    assert set(m.values()) <= {0, 2, 3}
+    # pulls land evenly on the ranks the formula selects (min/max over
+    # the non-zero pullers; a live rank with no pulls is not an imbalance)
+    assert transfer_balance(m, prefill_tp=4, live_ranks=roster) == 1.0
+    with pytest.raises(ValueError, match="at least one live rank"):
+        live_connection_map([], decode_tp=2, decode_dp=2)
+
+
+def test_transfer_balance_rejects_stale_mapping():
+    """A mapping computed before a retirement still points at the retired
+    rank; recomputing the balance against the shrunken roster must fail
+    loudly instead of silently folding its pulls onto a live rank."""
+    full = connection_map(prefill_tp=4, decode_tp=2, decode_dp=2)
+    assert 1 in set(full.values())
+    with pytest.raises(ValueError, match="stale connection map"):
+        transfer_balance(full, prefill_tp=4, live_ranks=[0, 2, 3])
+    # the legacy static-roster call is untouched by the live path
+    assert transfer_balance(full, prefill_tp=4) == 1.0
+    with pytest.raises(ValueError, match="at least one live rank"):
+        transfer_balance(full, prefill_tp=4, live_ranks=[])
