@@ -40,14 +40,19 @@ bench-slo:
 # section (interactive TPOT p99 held with class-aware control / violated
 # without on the identical burst, >= 1 mid-decode batch preemption, and
 # preempted-then-resumed tokens bit-identical to the uncontended run).
-# The prefill artifact is schema 8: the handoff_overlap section (pipelined
+# The prefill artifact is schema 9: the handoff_overlap section (pipelined
 # chunked KV streaming strictly lowers virtual-clock TTFT vs the
 # synchronous whole-request handoff, hides transfer time behind prefill,
-# and stays token-identical).
+# and stays token-identical) AND the ems section (multi-turn session hit
+# rate growing across turns through the shared EMS tier, promote/demote
+# byte conservation against the RDMA-plane transfer books, TTFT split by
+# hit depth, analytic UB-vs-VPC reuse gain, and the hit-aware admission
+# demo: the suffix-blind gate waits where the hit-aware gate admits).
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_decode_throughput --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_mtp --smoke
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_prefill_throughput --smoke
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_context_caching --smoke
 
 bench-check:
 	$(PY) -c "import json; d = json.load(open('BENCH_decode.json')); \
@@ -99,7 +104,7 @@ bench-check:
 	f\"{sc['preemptions']} preemptions, \" \
 	f\"brownout peak L{sc['brownout_peak_level']}\")"
 	$(PY) -c "import json; p = json.load(open('BENCH_prefill.json')); \
-	assert p['schema'] == 8, f'BENCH_prefill.json schema {p[\"schema\"]} != 8'; \
+	assert p['schema'] == 9, f'BENCH_prefill.json schema {p[\"schema\"]} != 9'; \
 	h = p['handoff_overlap']; \
 	assert h['tokens_identical'] is True, \
 	'streamed handoff tokens diverged from the synchronous path'; \
@@ -112,11 +117,35 @@ bench-check:
 	'streaming did not actually chunk the handoff'; \
 	assert h['stream_bytes'] > 0 and h['max_chunk_bytes_in_flight'] > 0, \
 	'transfer-bytes-in-flight accounting missing'; \
-	print('BENCH_prefill.json schema 8 OK:', \
+	e = p['ems']; hr = e['hit_rate_by_turn']; \
+	assert hr[0] == 0 and hr[-1] > hr[0], \
+	f'EMS hit rate did not grow across session turns: {hr}'; \
+	assert e['hit_rate'] > 0, 'EMS served no hits on the session trace'; \
+	assert e['demote_bytes'] > 0, 'EMS write-back moved no bytes'; \
+	assert e['demote_bytes'] == e['transfer_bytes_demoted'], \
+	'EMS demote bytes diverged from the RDMA-plane transfer books'; \
+	assert e['promote_bytes'] == e['transfer_bytes_promoted'], \
+	'EMS promote bytes diverged from the RDMA-plane transfer books'; \
+	t = e['ttft_by_hit_depth']; \
+	assert t['cold']['n'] > 0 and t['cold']['ttft_ms'] is not None, \
+	'TTFT-by-hit-depth cold bucket empty'; \
+	assert t['deep']['n'] > 0 and t['deep']['ttft_ms'] is not None, \
+	'TTFT-by-hit-depth deep bucket empty (sessions never reused deeply)'; \
+	assert e['ub_vs_vpc_reuse90_gain'] > 1, \
+	'UB plane showed no TTFT gain over VPC at 90% reuse'; \
+	d = e['hit_aware_admission']; \
+	assert d['suffix_blind_decision'] == 'wait', \
+	'demo gate was not saturated: blind gate admitted'; \
+	assert d['hit_aware_decision'] == 'admit', \
+	'hit-aware gate failed to admit the mostly-cached request'; \
+	print('BENCH_prefill.json schema 9 OK:', \
 	f\"streamed TTFT p50 {h['streamed_ttft_p50_s']*1e3:.3f}ms < \" \
 	f\"sync {h['sync_ttft_p50_s']*1e3:.3f}ms, \" \
 	f\"{h['overlap_hidden_s']*1e3:.3f}ms hidden over \" \
-	f\"{h['stream_chunks']} chunks, \" \
-	f\"max {h['max_chunk_bytes_in_flight']} B in flight\")"
+	f\"{h['stream_chunks']} chunks; \" \
+	f\"ems hit rate {hr[0]} -> {hr[-1]} over {e['turns']} turns, \" \
+	f\"{e['demote_bytes']} B demoted / {e['promote_bytes']} B promoted, \" \
+	f\"hit-aware {d['suffix_blind_decision']} -> \" \
+	f\"{d['hit_aware_decision']} at charge {d['suffix_charge']}\")"
 
 ci: smoke test bench-smoke bench-check

@@ -133,7 +133,7 @@ def _live_rows() -> None:
         "tpot_p99_ms": None,
         "decode_chunk": None,
     }
-    path = write_bench_artifact("prefill", artifact, schema=8)
+    path = write_bench_artifact("prefill", artifact, schema=9)
     emit("prefill_tput", "artifact", path, "")
 
 

@@ -81,7 +81,12 @@ def write_bench_artifact(name: str, payload: Dict, schema: int = 7) -> str:
     counts, preempt-resume token identity, brownout transitions); schema 8
     (prefill artifact) adds the handoff_overlap section (streamed vs
     synchronous TTFT split under pipelined chunked KV streaming, transfer
-    bytes in flight, token identity of the two paths)."""
+    bytes in flight, token identity of the two paths); schema 9 (prefill
+    artifact) adds the ems section (multi-turn session hit rate by turn,
+    promote/demote bytes through the shared EMS tier, TTFT split by hit
+    depth, analytic UB-vs-VPC reuse gain, and the hit-aware admission
+    demo: a mostly-cached request admitted where the suffix-blind gate
+    waits)."""
     path = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
     with open(path, "w") as f:
         json.dump({"schema": schema, "bench": name, **payload}, f, indent=1,
@@ -580,6 +585,44 @@ def live_joint_serve(*, joint: bool = True, requests=None,
         capacity=96, decode_engines=2, **kw)
     results = system.serve(reqs, open_loop=True)
     return results, system.scheduler, system
+
+
+EMS_SESSIONS = 3
+EMS_TURNS = 3
+
+
+def live_ems_serve(*, n_sessions: int = EMS_SESSIONS, turns: int = EMS_TURNS,
+                   hit_aware: bool = False, seed: int = 13,
+                   decode_batch: int = 4, tpot_budget_ms=None):
+    """Multi-turn session trace through a ServingSystem backed by the
+    shared :class:`~repro.mempool.EMSService` tier with ``cache_affinity``
+    routing; returns (results, scheduler, system, reqs). Not cached: the
+    EMS hit-rate trajectory across turns (cold first turns, grown-prefix
+    reuse on later ones) is exactly what callers measure, so every run
+    starts from an empty tier. Utterance/reply lengths are clipped tight
+    to bound the set of compiled prefill shapes at smoke scale."""
+    from repro.mempool import EMSService, MemoryPool
+    from repro.serving import SchedulerConfig, ServingSystem
+    from repro.serving.workload import multi_turn_sessions
+
+    cfg, params = live_model()
+    reqs = multi_turn_sessions(
+        n_sessions, seed=seed, vocab_size=cfg.vocab_size,
+        session_rate_rps=200.0, turns=turns, turn_tokens_median=8,
+        turn_tokens_sigma=0.4, turn_tokens_max=12,
+        max_new_median=3, max_new_sigma=0.3, max_new_max=4)
+    cap = max(len(r.prompt) + r.max_new_tokens for r in reqs) + 8
+    ems = EMSService(MemoryPool(n_nodes=4), block_tokens=4,
+                     model_tag=cfg.name)
+    system = ServingSystem(
+        params, cfg, n_prefill=2, decode_batch=decode_batch,
+        capacity=cap, decode_engines=2, decode_router="cache_affinity",
+        context_cache=ems, tpot_budget_ms=tpot_budget_ms,
+        hit_aware_admission=True if hit_aware else None,
+        scheduler_config=SchedulerConfig(
+            decode_cost=calibrated_decode_cost(LIVE_ARCH)))
+    results = system.serve(reqs, open_loop=True)
+    return results, system.scheduler, system, reqs
 
 
 def live_poisson_serve(*, rate_rps: float, tpot_budget_ms=None,

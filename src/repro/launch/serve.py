@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
       --n-requests 6 --prompt-len 24 --max-new 8 \
       [--mtp [--mtp-fused] [--fit-draft]] [--no-cache] \
+      [--hit-aware-admission] \
       [--policy least_loaded|round_robin|queue_depth] \
       [--decode-engines 2 --decode-router least_loaded_slots|round_robin|\
        cache_affinity [--rebalance-every 4]] \
@@ -31,7 +32,7 @@ import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.core import init_mtp_params
-from repro.mempool import ContextCache, MemoryPool
+from repro.mempool import EMSService, MemoryPool
 from repro.models import init_params
 from repro.serving import Request, ServingSystem
 from repro.serving.faults import FaultInjector, FaultPlan
@@ -56,6 +57,10 @@ def main() -> None:
                          "continuations before serving (realistic MTP "
                          "acceptance at smoke scale)")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--hit-aware-admission", action="store_true",
+                    help="admission gate charges only the uncached suffix "
+                         "of a request (EMS match_prefix probe at enqueue) "
+                         "instead of a full slot")
     ap.add_argument("--decode-batch", type=int, default=4)
     ap.add_argument("--policy", default="least_loaded",
                     choices=sorted(ROUTERS),
@@ -182,7 +187,7 @@ def main() -> None:
     cc = None
     if not args.no_cache:
         pool = MemoryPool(n_nodes=8)
-        cc = ContextCache(pool, block_tokens=8, model_tag=cfg.name)
+        cc = EMSService(pool, block_tokens=8, model_tag=cfg.name)
     mtp_params = init_mtp_params(jax.random.PRNGKey(1), cfg) if args.mtp else None
 
     rng = np.random.RandomState(args.seed)
@@ -281,6 +286,8 @@ def main() -> None:
                            or None,
                            prefill_chunk=args.prefill_chunk,
                            degrade_shed_queue_s=args.degrade_shed_queue_s,
+                           hit_aware_admission=args.hit_aware_admission
+                           or None,
                            fault_injector=injector)
     t0 = time.time()
     results = system.serve(reqs, open_loop=open_loop)
@@ -359,6 +366,15 @@ def main() -> None:
               f"compiled widths {sorted(widths)}")
     if cc is not None:
         print("pool:", cc.pool.stats())
+        ems = cc.ems_stats()
+        print("ems: "
+              f"hit_rate={ems['hit_rate']:.3f} "
+              f"(hbm {ems['hbm_hits']} / pool {ems['pool_hits']} / "
+              f"miss {ems['fetch_misses']}), "
+              f"promoted {ems['promote_bytes']/2**20:.2f} MiB, "
+              f"demoted {ems['demote_bytes']/2**20:.2f} MiB, "
+              f"dedup_skipped={ems['dedup_skipped']} "
+              f"evictions={ems['hbm_evictions']}")
     print("transfer:", system.transfer.transfers, "handoffs,",
           f"{system.transfer.bytes_moved/2**20:.1f} MiB over RDMA plane")
     if injector is not None:

@@ -9,4 +9,5 @@ from repro.mempool.pool import (  # noqa: F401
     VPC_PLANE,
 )
 from repro.mempool.context_cache import ContextCache  # noqa: F401
+from repro.mempool.ems import EMSService  # noqa: F401
 from repro.mempool.model_cache import ModelCache, ModelMeta  # noqa: F401

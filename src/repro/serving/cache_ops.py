@@ -119,6 +119,16 @@ def pack_blocks(cfg: ModelConfig, caches, n_blocks: int,
     return [flat[bi] for bi in range(n_blocks)]
 
 
+def payload_token_nbytes(cfg: ModelConfig, caches) -> int:
+    """Stored bytes per cached token: the size of a one-token
+    :func:`seq_slice` payload as :func:`pack_payload` serializes it
+    (float32 storage). EMS capacity sizing and bench byte accounting both
+    derive per-block footprints from this instead of re-deriving model
+    cache layouts by hand."""
+    payload = seq_slice(cfg, caches, 0, 1)
+    return sum(int(x.size) for x in jax.tree.leaves(payload)) * 4
+
+
 def fingerprint(payload: Any) -> int:
     """Order-stable CRC32 over every array leaf's raw bytes — the
     integrity check :class:`~repro.serving.transfer.KVTransferEngine`

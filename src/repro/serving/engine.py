@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import mtp as mtp_mod
 from repro.mempool.context_cache import ContextCache
+from repro.mempool.ems import EMSService
 from repro.models import model as model_mod
 from repro.serving import cache_ops
 from repro.serving.faults import FaultInjector
@@ -92,6 +93,9 @@ class PrefillEngine:
         self.cc = context_cache
         self.instance_id = instance_id
         self.load = 0  # in-flight prompt tokens (scheduler signal)
+        # EMS device-tier tag: blocks this instance computes land (dirty)
+        # in its own HBM tier and write back to the shared pool async.
+        self._ems_tag = f"prefill{instance_id}"
         self.suffix_chunk = suffix_chunk or self.SUFFIX_CHUNK
         # Fresh prompts, when set, run through chunked prefill_continue
         # calls of this width (offset 0 on a fresh cache == prefill): one
@@ -177,13 +181,22 @@ class PrefillEngine:
                 reuse_len -= reuse_len % self.cc.block
                 keys = keys[: reuse_len // self.cc.block]
                 if reuse_len > 0:
-                    caches = self._fresh_cache()
-                    tmpl = cache_ops.seq_slice(cfg, caches, 0, self.cc.block)
-                    for bi, key in enumerate(keys):
-                        flat = self.cc.pool.get(key)
-                        payload = cache_ops.unpack_payload(flat, tmpl)
-                        caches = cache_ops.seq_insert(cfg, caches, payload,
-                                                      bi * self.cc.block)
+                    # Resolve through the cache service (EMS: engine-HBM
+                    # tier first, then pooled tier with an RDMA promote). A
+                    # block evicted between match and fetch shortens the
+                    # returned prefix — shrink the reuse and recompute the
+                    # rest instead of crashing on the race.
+                    flats = self.cc.fetch(keys, engine=self._ems_tag)
+                    if len(flats) < len(keys):
+                        reuse_len = len(flats) * self.cc.block
+                    if reuse_len > 0:
+                        caches = self._fresh_cache()
+                        tmpl = cache_ops.seq_slice(cfg, caches, 0,
+                                                   self.cc.block)
+                        for bi, flat in enumerate(flats):
+                            payload = cache_ops.unpack_payload(flat, tmpl)
+                            caches = cache_ops.seq_insert(
+                                cfg, caches, payload, bi * self.cc.block)
             if reuse_len > 0:
                 # Suffix-only computation: teacher-forced continuation from
                 # the reused prefix (positions offset by reuse_len). The
@@ -230,7 +243,8 @@ class PrefillEngine:
                 payloads = cache_ops.pack_blocks(cfg, caches, n_blocks,
                                                  self.cc.block)
                 if payloads:
-                    self.cc.store(prompt[: n_blocks * self.cc.block], payloads)
+                    self.cc.store(prompt[: n_blocks * self.cc.block],
+                                  payloads, engine=self._ems_tag)
             return first, caches, res
         finally:
             self.load -= len(prompt)
@@ -727,6 +741,7 @@ class ServingSystem:
                  brownout: Optional[bool] = None,
                  brownout_patience: Optional[int] = None,
                  brownout_cooldown: Optional[int] = None,
+                 hit_aware_admission: Optional[bool] = None,
                  scheduler_config: Optional[SchedulerConfig] = None,
                  fault_injector: Optional[FaultInjector] = None):
         self.cfg = cfg
@@ -752,6 +767,7 @@ class ServingSystem:
             ("brownout", brownout),
             ("brownout_patience", brownout_patience),
             ("brownout_cooldown", brownout_cooldown),
+            ("hit_aware_admission", hit_aware_admission),
         ) if v is not None}
         # use_mtp is engine state, not policy: the scheduler's MTP cost
         # accounting must always match what the decode engine actually runs
@@ -809,9 +825,14 @@ class ServingSystem:
                                 mtp_fused=mtp_fused)
 
         engines = [engine_factory(e) for e in range(decode_engines)]
+        # Affinity routing scores residency against the shared EMS index
+        # when the cache is an EMSService; a plain ContextCache keeps the
+        # legacy advisory per-engine residency.
+        self._ems = context_cache if isinstance(context_cache, EMSService) \
+            else None
         self.pool = DecodePool(
             engines, make_decode_router(sched_cfg.decode_policy,
-                                        decode_engines),
+                                        decode_engines, ems=self._ems),
             engine_factory=engine_factory)
         self.decode = engines[0]       # single-engine compatibility alias
         self.faults = fault_injector
@@ -855,7 +876,8 @@ class ServingSystem:
             # Routing is pure control plane: swap the pool router in place
             # (a fresh policy instance — affinity/cursor state resets).
             self.pool.router = make_decode_router(new.decode_policy,
-                                                  self.pool.n)
+                                                  self.pool.n,
+                                                  ems=self._ems)
         self.scheduler = Scheduler(self.prefill_pool.n, self.pool.slot_mgrs,
                                    scheduler_config)
         # Engine liveness is pool state: carry parked engines (both roles)
@@ -1124,6 +1146,10 @@ class ServingSystem:
             pvictim = min(self.prefill_pool.live_ids,
                           key=lambda i: (self.prefills[i].load, -i))
             self.prefill_pool.retire_engine(pvictim)
+            if self._ems is not None:
+                # Retirement must not lose cached prefixes: demote the
+                # instance's dirty HBM blocks into the shared pool tier.
+                self._ems.drop_engine(self.prefills[pvictim]._ems_tag)
             sched.set_prefill_live(pvictim, False)
             engine, revived = pool.spawn_engine()
             if revived:
@@ -1442,6 +1468,12 @@ class ServingSystem:
                 trace = sched.on_arrival(req.rid, req.arrival,
                                          len(req.prompt),
                                          slo_class=req.slo_class)
+                if sched.config.hit_aware_admission and self.cc is not None:
+                    # Hit-aware admission: probe the shared cache index at
+                    # enqueue so the gate charges only the uncached suffix.
+                    # Non-mutating on EMS; the prefill reuse clamp below
+                    # re-derives the authoritative count.
+                    trace.cached_tokens = self.cc.probe_prefix(req.prompt)
                 # max_new <= 1 never decodes, so only the prompt must fit
                 # (in the prefill cache, which shares `capacity`).
                 need = len(req.prompt) if req.max_new_tokens <= 1 \

@@ -184,20 +184,37 @@ class PoolRoundRobinRouter(DecodePoolRouter):
 
 class CacheAffinityRouter(DecodePoolRouter):
     """EMS-aware placement: prefer the engine already holding the request's
-    reusable prefix blocks (most matched block keys wins), falling back to
-    least-loaded-slots. Engines with no free slot are deprioritized so
-    affinity never stalls the pool while a peer sits idle; the residency
-    map persists across serve() waves (cache affinity is cross-wave by
-    nature)."""
+    reusable prefix blocks, falling back to least-loaded-slots. Engines
+    with no free slot are deprioritized so affinity never stalls the pool
+    while a peer sits idle.
+
+    With an :class:`~repro.mempool.ems.EMSService` bound (``ems=``), the
+    residency signal is **derived from the shared EMS index** — the
+    hit-depth of the request's leading block keys in each engine's device
+    tier (``engine_residency``), with placements/migrations recorded as
+    EMS pins and retire/fail dropping the whole tier. Routing and cache
+    reality therefore cannot drift: the router reads the same structure
+    the cache serves from. Without an EMS the legacy advisory
+    key→last-engine map is kept for back-compat (it persists across
+    serve() waves; cache affinity is cross-wave by nature)."""
 
     name = "cache_affinity"
     uses_affinity = True
 
-    def __init__(self, n_engines: int):
+    def __init__(self, n_engines: int, ems=None):
         super().__init__(n_engines)
+        self.ems = ems
         self._resident: Dict[str, int] = {}   # block key -> last engine
 
+    @staticmethod
+    def _tag(engine: int) -> str:
+        """EMS device-tier tag of a pool decode engine."""
+        return f"decode{engine}"
+
     def score(self, block_keys: Sequence[str]) -> List[int]:
+        if self.ems is not None:
+            return [self.ems.engine_residency(self._tag(e), block_keys)
+                    for e in range(self.n)]
         scores = [0] * self.n
         for k in block_keys:
             e = self._resident.get(k)
@@ -214,21 +231,34 @@ class CacheAffinityRouter(DecodePoolRouter):
 
     def on_admit(self, engine: int,
                  block_keys: Sequence[str] = ()) -> None:
+        if self.ems is not None:
+            self.ems.pin(self._tag(engine), block_keys)
+            return
         for k in block_keys:
             self._resident[k] = engine
 
     def on_retire(self, engine: int) -> None:
         # A parked or failed engine's cache rows are dead: routing future
         # requests toward it by stale residency would fight the live mask.
+        # With an EMS the device tier is dropped (dirty blocks demote
+        # first), so the pooled tier keeps every cached prefix.
+        if self.ems is not None:
+            self.ems.drop_engine(self._tag(engine))
+            return
         self._resident = {k: e for k, e in self._resident.items()
                           if e != engine}
 
     def on_migrate(self, engine: int,
                    block_keys: Sequence[str] = ()) -> None:
+        if self.ems is not None:
+            self.ems.pin(self._tag(engine), block_keys)
+            return
         for k in block_keys:
             self._resident[k] = engine
 
     def residency(self, engine: int, block_keys: Sequence[str]) -> int:
+        if self.ems is not None:
+            return self.ems.engine_residency(self._tag(engine), block_keys)
         return sum(1 for k in block_keys
                    if self._resident.get(k) == engine)
 
@@ -238,13 +268,20 @@ DECODE_ROUTERS = {r.name: r for r in
                    CacheAffinityRouter)}
 
 
-def make_decode_router(policy: str, n_engines: int) -> DecodePoolRouter:
+def make_decode_router(policy: str, n_engines: int,
+                       ems=None) -> DecodePoolRouter:
+    """Build a decode-pool router by name. ``ems`` (an
+    :class:`~repro.mempool.ems.EMSService`, or None) binds affinity-aware
+    policies to the shared cache index; locality-free policies ignore it."""
     try:
-        return DECODE_ROUTERS[policy](n_engines)
+        cls = DECODE_ROUTERS[policy]
     except KeyError:
         raise ValueError(
             f"unknown decode routing policy {policy!r}; "
             f"available: {sorted(DECODE_ROUTERS)}") from None
+    if cls.uses_affinity:
+        return cls(n_engines, ems=ems)
+    return cls(n_engines)
 
 
 # ---------------------------------------------------------------------------

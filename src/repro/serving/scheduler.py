@@ -67,6 +67,7 @@ class RequestTrace:
     prefill_end: float = 0.0
     reused_tokens: int = 0
     computed_tokens: int = 0
+    cached_tokens: int = 0   # EMS hit-probe at enqueue (hit-aware admission)
     transfer_seconds: float = 0.0
     transfer_chunks: int = 0   # pipelined handoff: chunks shipped (0 = sync)
     overlap_seconds: float = 0.0   # transfer time hidden behind prefill
@@ -465,18 +466,31 @@ class AdmissionGate:
     over the joining class AND every class already resident on the target
     engine — a relaxed-budget batch request may not inflate the batch past
     what a co-resident interactive request's budget allows.
+
+    With ``hit_aware=True`` (EMS hit-aware admission) the gate weighs each
+    request by its *suffix* charge — the fraction of its prompt the EMS
+    probe could not serve from cache — instead of a flat 1.0: the caller
+    passes the summed resident ``load`` and the joining request's
+    ``charge``, and admissibility becomes ``load + charge <= cap``. A
+    mostly-cached request is nearly free, so it can join a batch the
+    suffix-blind count-based gate would have held at the cap. With every
+    charge at the default 1.0 the rule is exactly ``active < cap`` — the
+    hit-aware gate degrades bit-identically to the blind one on cold
+    traffic.
     """
 
     def __init__(self, cost: DecodeCostModel,
                  tpot_budget_s: Optional[float] = None,
                  mode: str = "queue", *,
                  class_budgets: Optional[Dict[str, Optional[float]]] = None,
-                 class_modes: Optional[Dict[str, str]] = None):
+                 class_modes: Optional[Dict[str, str]] = None,
+                 hit_aware: bool = False):
         if mode not in ("queue", "shed"):
             raise ValueError(f"admission mode must be queue|shed, got {mode!r}")
         self.cost = cost
         self.budget_s = tpot_budget_s
         self.mode = mode
+        self.hit_aware = hit_aware
         self.class_budgets = dict(class_budgets or {})
         self.class_modes = dict(class_modes or {})
         for cls, m in self.class_modes.items():
@@ -513,16 +527,31 @@ class AdmissionGate:
         return self.class_modes.get(slo_class, self.mode)
 
     def admissible(self, active: int, slo_class: str = "interactive",
-                   resident_classes: Sequence[str] = ()) -> bool:
-        """May one more request join a batch currently ``active`` deep?"""
+                   resident_classes: Sequence[str] = (), *,
+                   load: Optional[float] = None,
+                   charge: float = 1.0) -> bool:
+        """May one more request join a batch currently ``active`` deep?
+
+        Hit-aware gates compare ``load + charge`` (suffix-weighted
+        occupancy) against the cap; ``load`` defaults to ``active`` so a
+        caller that passes no EMS charges gets the blind rule exactly
+        (``active + 1.0 <= cap`` ⇔ ``active < cap`` for integer caps)."""
         caps = [self.cap_for(c) for c in {slo_class, *resident_classes}]
         caps = [c for c in caps if c is not None]
-        return not caps or active < min(caps)
+        if not caps:
+            return True
+        cap = min(caps)
+        if self.hit_aware:
+            base = float(active) if load is None else load
+            return base + charge <= cap + 1e-9
+        return active < cap
 
     def decide(self, active: int, has_free_slot: bool,
                slo_class: str = "interactive",
                resident_classes: Sequence[str] = (),
-               mode_override: Optional[str] = None) -> str:
+               mode_override: Optional[str] = None, *,
+               load: Optional[float] = None,
+               charge: float = 1.0) -> str:
         """'admit' | 'wait' | 'shed' for the head-of-queue request.
 
         ``mode_override`` forces the queue/shed decision regardless of the
@@ -538,7 +567,8 @@ class AdmissionGate:
             return "shed"
         if not has_free_slot:
             return "wait"
-        if self.admissible(active, slo_class, resident_classes):
+        if self.admissible(active, slo_class, resident_classes,
+                           load=load, charge=charge):
             return "admit"
         return "shed" if mode == "shed" else "wait"
 
@@ -806,6 +836,14 @@ class SchedulerConfig:
     brownout_patience: int = 2
     brownout_cooldown: int = 2
     brownout_queue_age_s: float = 0.05
+    # EMS hit-aware admission: charge the gate only the *suffix* cost of a
+    # request — (prompt − cached) / prompt, from the EMS match_prefix probe
+    # stamped on the trace at enqueue (cached_tokens) — and weigh resident
+    # requests the same way. A mostly-cached request is nearly free, so it
+    # can join a batch a suffix-blind gate would hold at the cap. Composes
+    # with SLO classes (strictest cap still wins) and brownout (overrides
+    # still short-circuit). Off = bit-identical to the blind gate.
+    hit_aware_admission: bool = False
 
 
 class Scheduler:
@@ -847,7 +885,8 @@ class Scheduler:
                     else self.config.tpot_budget_ms * 1e-3)
         self.gate = AdmissionGate(self.cost, budget_s, self.config.admission,
                                   class_budgets=self._class_budgets(),
-                                  class_modes=self._class_modes())
+                                  class_modes=self._class_modes(),
+                                  hit_aware=self.config.hit_aware_admission)
         self.begin_epoch()
 
     def _class_budgets(self) -> Optional[Dict[str, Optional[float]]]:
@@ -1052,9 +1091,27 @@ class Scheduler:
                     if info.rid in self.traces}
         override = None if recovered \
             else self.brownout_mode_override(trace.slo_class)
+        load = charge = None
+        if self.config.hit_aware_admission:
+            charge = self.suffix_charge(trace)
+            load = sum(self.suffix_charge(self.traces[info.rid])
+                       for _, info in mgr.active_slots()
+                       if info.rid in self.traces)
         return self.gate.decide(mgr.active, mgr.free > 0, trace.slo_class,
                                 resident_classes=resident,
-                                mode_override=override)
+                                mode_override=override,
+                                load=load,
+                                charge=1.0 if charge is None else charge)
+
+    def suffix_charge(self, trace: RequestTrace) -> float:
+        """Hit-aware admission weight: the fraction of the prompt the EMS
+        could not serve — ``(prompt − cached) / prompt`` — floored at one
+        token's worth (even a fully-cached request recomputes its last
+        token and occupies a decode slot). Uses the measured reuse once
+        prefill ran, else the enqueue-time probe."""
+        pt = max(1, trace.prompt_tokens)
+        cached = min(max(trace.reused_tokens, trace.cached_tokens), pt - 1)
+        return max(1.0 - cached / pt, 1.0 / pt)
 
     # -- SLO-class overload control ----------------------------------------
     @property
@@ -1413,7 +1470,8 @@ class Scheduler:
             gate = AdmissionGate(new_cost, self.gate.budget_s,
                                  self.config.admission,
                                  class_budgets=self._class_budgets(),
-                                 class_modes=self._class_modes())
+                                 class_modes=self._class_modes(),
+                                 hit_aware=self.config.hit_aware_admission)
         except ValueError:
             return None
         self.cost, self.gate = new_cost, gate

@@ -165,6 +165,10 @@ class KVTransferEngine:
         self.bytes_moved = 0
         self.migrations = 0
         self.bytes_migrated = 0
+        self.promotes = 0
+        self.bytes_promoted = 0
+        self.demotes = 0
+        self.bytes_demoted = 0
         self.retries = 0
         self.timeouts = 0
         self.corruptions = 0
@@ -255,4 +259,20 @@ class KVTransferEngine:
         dt, nbytes = self._deliver(payload, "migrate", rid, chunk)
         self.migrations += 1
         self.bytes_migrated += nbytes
+        return dt
+
+    def promote(self, payload: Any) -> float:
+        """EMS tier promotion (pooled host tier → device HBM): same
+        isolated plane, separate books so cache-tier traffic is visible
+        next to handoff/migration traffic."""
+        dt, nbytes = self._deliver(payload, "promote")
+        self.promotes += 1
+        self.bytes_promoted += nbytes
+        return dt
+
+    def demote(self, payload: Any) -> float:
+        """EMS write-back demotion (device HBM → pooled host tier)."""
+        dt, nbytes = self._deliver(payload, "demote")
+        self.demotes += 1
+        self.bytes_demoted += nbytes
         return dt
